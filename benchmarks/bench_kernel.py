@@ -1,0 +1,99 @@
+"""ResidualAttention kernel benchmark (paper §5.3).
+
+On this CPU container the Pallas kernel runs in interpret mode (a Python
+loop), so wall time is NOT indicative of TPU performance — correctness and
+the XLA-path (flash) timing are.  We report:
+  * interpret-mode kernel vs jnp oracle max error across a shape sweep,
+  * XLA flash-disagg timing vs naive HBM reconstruction timing (the
+    paper's §3.3 comparison at the XLA level): fused streaming vs full
+    materialization.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import attention as attn_lib
+from repro.core import rope as rope_lib
+from repro.kernels import ref as ref_mod
+from repro.kernels import residual_attention as ra
+
+
+def kernel_error_sweep() -> None:
+    for (sq, sk, hq, hkv, d, r) in [(128, 128, 4, 2, 64, 16),
+                                    (64, 256, 8, 1, 128, 8)]:
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 8)
+        B = 1
+        q = jax.random.normal(ks[0], (B, sq, hq, d))
+        kb = jax.random.normal(ks[1], (B, sk, hkv, d))
+        vb = jax.random.normal(ks[2], (B, sk, hkv, d))
+        kr = jax.random.normal(ks[3], (B, sk, r)) * 0.3
+        vr = jax.random.normal(ks[4], (B, sk, r)) * 0.3
+        bk = jax.random.normal(ks[5], (B, r, hkv * d)) * 0.3
+        bv = jax.random.normal(ks[6], (B, r, hkv * d)) * 0.3
+        pos = jnp.broadcast_to(jnp.arange(sk), (B, sk))
+        sin, cos = rope_lib.rope_sincos(pos, d)
+        qpos = jnp.broadcast_to(jnp.arange(sq), (B, sq))
+        kvl = jnp.full((B,), sk, jnp.int32)
+        t0 = time.time()
+        got = ra.residual_attention_prefill(
+            q, kb, vb, kr, vr, bk, bv, sin, cos, qpos, kvl, scale=d**-0.5,
+            block_q=64, block_k=64, interpret=True)
+        us = (time.time() - t0) * 1e6
+        want = ref_mod.residual_attention_ref(
+            q, kb, vb, kr, vr, bk, bv, sin, cos, qpos=qpos, kv_len=kvl,
+            scale=d**-0.5)
+        err = float(jnp.max(jnp.abs(got - want)))
+        emit(f"kernel.prefill.s{sq}x{sk}_h{hq}g{hkv}_d{d}_r{r}", us,
+             f"max_err={err:.2e};interpret=True")
+
+
+def fused_vs_materialized() -> None:
+    """Flash-fused disagg attention vs naive HBM reconstruction (XLA)."""
+    B, S, hq, hkv, d, r = 2, 2048, 8, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    q = jax.random.normal(ks[0], (B, S, hq, d))
+    kb = jax.random.normal(ks[1], (B, S, hkv, d))
+    vb = jax.random.normal(ks[2], (B, S, hkv, d))
+    kr = jax.random.normal(ks[3], (B, S, r)) * 0.3
+    vr = jax.random.normal(ks[4], (B, S, r)) * 0.3
+    bk = jax.random.normal(ks[5], (B, r, hkv * d)) * 0.3
+    bv = jax.random.normal(ks[6], (B, r, hkv * d)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    sin, cos = rope_lib.rope_sincos(pos, d)
+
+    @jax.jit
+    def fused(q, kb, vb, kr, vr, bk, bv):
+        return attn_lib.flash_attention(q, kb, vb, qpos=pos, kpos=pos,
+                                        causal=True, k_res=kr, v_res=vr,
+                                        b_k=bk, b_v=bv)
+
+    @jax.jit
+    def materialized(q, kb, vb, kr, vr, bk, bv):
+        k, v = ref_mod.reconstruct(kb, vb, kr, vr, bk, bv, sin, cos)
+        return attn_lib.flash_attention(q, k, v, qpos=pos, kpos=pos,
+                                        causal=True)
+
+    for name, fn in (("fused", fused), ("materialized", materialized)):
+        out = fn(q, kb, vb, kr, vr, bk, bv)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            out = fn(q, kb, vb, kr, vr, bk, bv)
+            out.block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        emit(f"kernel.xla.{name}", us, f"S={S};B={B}")
+
+
+def main() -> None:
+    kernel_error_sweep()
+    fused_vs_materialized()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun_*.json (produced by `python -m repro.launch.dryrun`)
+and prints per (arch × shape × mesh): the three analytic roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO ratio and the raw cost_analysis
+numbers (with the loops-once caveat, see launch/analytic.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load(paths=("experiments/dryrun_single.json",
+                "experiments/dryrun_multi.json")):
+    recs = []
+    for p in paths:
+        if os.path.exists(p):
+            recs.extend(json.load(open(p)))
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        emit("roofline.missing", 0,
+             "run `python -m repro.launch.dryrun --arch all --shape all"
+             " --mesh both --out ...` first")
+        return
+    for r in recs:
+        name = f"roofline.{r.get('mesh','single')}.{r['arch']}.{r['shape']}"
+        if r["status"] == "skipped":
+            emit(name, 0, "skipped=long_500k-needs-subquadratic")
+            continue
+        if r["status"] != "ok":
+            emit(name, 0, f"error={r.get('error','?')[:80]}")
+            continue
+        a = r["analytic"]
+        t = a["terms"]
+        emit(name, r.get("compile_s", 0) * 1e6,
+             f"dominant={t['dominant'].replace('_s','')};"
+             f"compute_s={t['compute_s']:.3e};"
+             f"memory_s={t['memory_s']:.3e};"
+             f"collective_s={t['collective_s']:.3e};"
+             f"useful_frac={a.get('useful_fraction',0):.2f};"
+             f"hlo_flops_raw={r['flops']:.2e};"
+             f"hlo_coll_raw={r['collectives']['total']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

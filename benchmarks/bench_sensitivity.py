@@ -1,0 +1,38 @@
+"""Paper Fig. 15 — sensitivity to LoRA rank and output length.
+
+Rank linearly scales the rCache footprint; output length accumulates fresh
+KV.  Both stress ForkKV's per-agent memory; we report throughput + peak
+memory for ForkKV vs prefix caching.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_workflow
+
+
+def main() -> None:
+    for rank in (4, 8, 16):
+        t0 = time.time()
+        f = run_workflow("forkkv", "react", rank=rank, n_workflows=2,
+                         agents=3, context=256, max_new=6, max_pages=192)
+        p = run_workflow("prefix", "react", rank=rank, n_workflows=2,
+                         agents=3, context=256, max_new=6, max_pages=192)
+        emit(f"sensitivity.rank{rank}", (time.time() - t0) * 1e6,
+             f"forkkv_tps={f['tasks']/f['wall_s']:.3f};"
+             f"prefix_tps={p['tasks']/p['wall_s']:.3f};"
+             f"forkkv_peak_MB={f['peak_cache_bytes']/2**20:.1f};"
+             f"prefix_peak_MB={p['peak_cache_bytes']/2**20:.1f}")
+    for max_new in (4, 8, 16):
+        t0 = time.time()
+        f = run_workflow("forkkv", "react", n_workflows=2, agents=3,
+                         context=256, max_new=max_new, max_pages=192)
+        p = run_workflow("prefix", "react", n_workflows=2, agents=3,
+                         context=256, max_new=max_new, max_pages=192)
+        emit(f"sensitivity.outlen{max_new}", (time.time() - t0) * 1e6,
+             f"forkkv_tps={f['tasks']/f['wall_s']:.3f};"
+             f"prefix_tps={p['tasks']/p['wall_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

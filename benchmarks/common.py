@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: engine runner + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+from repro.serving.workflows import WorkflowConfig, WorkflowDriver
+
+_MODEL_CACHE: Dict = {}
+
+
+def get_tiny_model(rank: int = 8, n_adapters: int = 32):
+    key = (rank, n_adapters)
+    if key not in _MODEL_CACHE:
+        cfg = tiny_serving_model(rank=rank)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1),
+                                    n_adapters=n_adapters)
+        _MODEL_CACHE[key] = (cfg, params, lora)
+    return _MODEL_CACHE[key]
+
+
+def run_workflow(mode: str, workflow: str = "react", *, rank: int = 8,
+                 n_workflows: int = 2, agents: int = 3, context: int = 256,
+                 max_new: int = 8, max_pages: int = 256,
+                 max_batch: int = 8, seed: int = 0, rounds: int = 1) -> Dict:
+    cfg, params, lora = get_tiny_model(rank=rank)
+    sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=max_batch,
+                     max_prefill_tokens=128, mode=mode,
+                     max_pages_per_req=48)
+    engine = Engine(cfg, params, lora, sc)
+    wf = WorkflowConfig(n_workflows=n_workflows, agents_per_workflow=agents,
+                        shared_context_len=context, max_new_tokens=max_new,
+                        vocab=cfg.vocab_size, seed=seed, rounds=rounds)
+    driver = WorkflowDriver(engine, wf)
+    return driver.run_react() if workflow == "react" \
+        else driver.run_mapreduce()
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row in the required ``name,us_per_call,derived`` format."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,31 @@
+"""End-to-end driver: serve ReAct and MapReduce agent workflows with the
+ForkKV engine and compare the three cache-sharing policies (paper Fig. 11).
+
+Run:  PYTHONPATH=src python examples/multi_agent_serving.py [--fast]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.common import run_workflow   # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true")
+args = ap.parse_args()
+
+n_wf = 1 if args.fast else 2
+print(f"{'policy':12s} {'workflow':10s} {'tasks/s':>8s} {'hit%':>6s} "
+      f"{'peakMB':>7s} {'batch':>6s}")
+for workflow in ("react", "mapreduce"):
+    for mode in ("forkkv", "prefix", "full_reuse"):
+        rep = run_workflow(mode, workflow, n_workflows=n_wf, agents=3,
+                           context=256, max_new=6, max_pages=192)
+        print(f"{mode:12s} {workflow:10s} "
+              f"{rep['tasks']/rep['wall_s']:8.3f} "
+              f"{100*rep['hit_rate']:6.1f} "
+              f"{rep['peak_cache_bytes']/2**20:7.1f} "
+              f"{rep['avg_decode_batch']:6.1f}")
+print("\nForkKV shares the bCache across agents (high hit%, low peak MB);"
+      "\nprefix caching cannot share across adapters; full_reuse shares"
+      "\neverything but degrades quality (see benchmarks/bench_quality.py).")

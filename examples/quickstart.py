@@ -1,0 +1,56 @@
+"""Quickstart: the ForkKV disaggregated KV cache in 60 lines.
+
+Builds a tiny llama-family model with two LoRA agents, shows
+  1. the disaggregated projection (bCache + rCache, deferred RoPE),
+  2. that reconstruction is EXACT on a single trajectory,
+  3. serving two agents over one shared context with a shared bCache.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LoRAConfig, ModelConfig, ServeConfig
+from repro.core.disagg import memory_ratio
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request
+
+cfg = ModelConfig(name="demo", family="dense", num_layers=2, d_model=128,
+                  num_heads=8, num_kv_heads=4, d_ff=256, vocab_size=512,
+                  dtype="float32", lora=LoRAConfig(rank=8), remat=False)
+params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=2)
+
+# --- 1+2: disaggregated == unified on one trajectory ----------------------
+tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 32), 0, 512)
+ids = jnp.zeros((1,), jnp.int32)
+unified = tfm.forward(params, tokens, cfg, lora=lora, adapter_ids=ids)
+disagg = tfm.forward(params, tokens, cfg, lora=lora, adapter_ids=ids,
+                     disagg=True)
+print(f"max |unified - disagg| = {float(jnp.abs(unified - disagg).max()):.2e}"
+      "  (exact: lossiness only appears when bCache is SHARED)")
+
+# Eq. 3: memory ratio for N agents
+for n in (4, 16, 64):
+    print(f"N={n:3d} agents: disagg/unified memory = "
+          f"{memory_ratio(n, cfg.lora.rank, cfg.kv_dim):.3f}")
+
+# --- 3: serve two agents over one shared context --------------------------
+sc = ServeConfig(page_size=16, max_pages=128, max_batch=4,
+                 max_prefill_tokens=64, mode="forkkv", max_pages_per_req=8)
+engine = Engine(cfg, params, lora, sc)
+shared = [int(t) for t in jax.random.randint(jax.random.PRNGKey(3), (48,),
+                                             0, 512)]
+for agent in (0, 1):
+    req = Request(rid=agent, adapter_id=agent, prompt=list(shared),
+                  max_new_tokens=8)
+    engine.submit(req)
+    while req.state != "done":
+        engine.step()
+    print(f"agent {agent}: generated {req.output[:8]}")
+
+m = engine.metrics()
+print(f"fork kinds: {m['hit_kinds']}  (agent 1 inherited agent 0's bCache)")
+print(f"bCache hit rate: {m['hit_rate']:.2f}, "
+      f"peak base pages: {m['peak_base_pages']}, "
+      f"peak residual pages: {m['peak_res_pages']}")

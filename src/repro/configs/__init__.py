@@ -1,0 +1,127 @@
+"""Config registry: ``--arch <id>`` resolution + input specs per shape.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given (architecture x input-shape) combination — the
+weak-type-correct, shardable, allocation-free pattern the dry-run lowers
+against.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import INPUT_SHAPES, ModelConfig, ShapeConfig, shape_by_name
+
+ARCH_MODULES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "dbrx-132b": "dbrx_132b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "starcoder2-3b": "starcoder2_3b",
+    "mamba2-130m": "mamba2_130m",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "llama3-405b": "llama3_405b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{ARCH_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_tiny_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).tiny()
+
+
+# --------------------------------------------------------------------------
+# Shape applicability (DESIGN.md section 5): long_500k requires sub-quadratic
+# attention — run only for SSM / hybrid / SWA archs.
+# --------------------------------------------------------------------------
+SUB_QUADRATIC = ("mamba2-130m", "recurrentgemma-9b", "h2o-danube-3-4b")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in SUB_QUADRATIC or cfg.sliding_window > 0 or \
+            cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def applicable_pairs():
+    """All (arch_id, shape) baseline pairs (33 of the 10x4=40)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES:
+            if shape_applicable(cfg, shape):
+                out.append((arch, shape.name))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct, no allocation)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                n_adapters: int = 8) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch x shape).  Caches/params are built by the
+    step builders in repro.launch; this covers the *per-step data* inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = cfg.activation_dtype
+    d = cfg.d_model
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.mode == "train":
+        if cfg.frontend == "vision_stub":
+            p = min(cfg.num_patches, S // 2)
+            return {"tokens": sds((B, S - p)), "labels": sds((B, S - p)),
+                    "extra_embeds": sds((B, p, d), f)}
+        if cfg.frontend == "audio_stub":
+            return {"tokens": sds((B, S)), "labels": sds((B, S)),
+                    "extra_embeds": sds((B, cfg.encoder_seq, d), f)}
+        return {"tokens": sds((B, S)), "labels": sds((B, S))}
+
+    if shape.mode == "prefill":
+        if cfg.frontend == "vision_stub":
+            p = min(cfg.num_patches, S // 2)
+            return {"tokens": sds((B, S - p)),
+                    "extra_embeds": sds((B, p, d), f)}
+        if cfg.frontend == "audio_stub":
+            return {"tokens": sds((B, S)),
+                    "extra_embeds": sds((B, cfg.encoder_seq, d), f)}
+        return {"tokens": sds((B, S))}
+
+    # decode: one token against a cache of length S
+    return {"tokens": sds((B,)), "kv_len": sds((B,))}
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeConfig, key=None):
+    """Small concrete analogue of input_specs for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if name == "kv_len":
+                out[name] = jnp.full(s.shape, max(1, shape.seq_len - 1),
+                                     s.dtype)
+            else:
+                out[name] = jax.random.randint(key, s.shape, 0,
+                                               cfg.vocab_size).astype(s.dtype)
+        else:
+            out[name] = jax.random.normal(key, s.shape, s.dtype) * 0.02
+    return out

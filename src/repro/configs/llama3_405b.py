@@ -1,0 +1,19 @@
+"""llama3-405b [dense]: 126L GQA kv=8, 128k vocab. [arXiv:2407.21783]
+
+Uses Adafactor + two-level scan remat: AdamW fp32 moments do not fit
+512 x 16GB v5e at our sharding (see EXPERIMENTS.md)."""
+import dataclasses
+from repro.core.config import LoRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense", num_layers=126, d_model=16384,
+    num_heads=128, num_kv_heads=8, d_ff=53248, vocab_size=128256,
+    lora=LoRAConfig(rank=16), scan_layers=True, scan_groups=14,
+    optimizer="adafactor", citation="arXiv:2407.21783")
+
+
+def tiny() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="llama3-tiny", num_layers=2, d_model=128, num_heads=8,
+        num_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32",
+        scan_groups=0, optimizer="adamw", remat=False)

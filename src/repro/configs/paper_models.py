@@ -1,0 +1,28 @@
+"""The paper's own evaluation models (ForkKV §7.1): Llama3-8B, Qwen2.5-7B,
+Qwen2.5-14B — used by the benchmark suite, not part of the assigned pool."""
+import dataclasses
+from repro.core.config import LoRAConfig, ModelConfig
+
+LLAMA3_8B = ModelConfig(
+    name="llama3-8b", family="dense", num_layers=32, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256,
+    lora=LoRAConfig(rank=16), scan_layers=True, citation="arXiv:2407.21783")
+
+QWEN25_7B = ModelConfig(
+    name="qwen2.5-7b", family="dense", num_layers=28, d_model=3584,
+    num_heads=28, num_kv_heads=4, d_ff=18944, vocab_size=152064,
+    lora=LoRAConfig(rank=16), scan_layers=True, citation="Qwen2.5")
+
+QWEN25_14B = ModelConfig(
+    name="qwen2.5-14b", family="dense", num_layers=48, d_model=5120,
+    num_heads=40, num_kv_heads=8, d_ff=13824, vocab_size=152064,
+    lora=LoRAConfig(rank=16), scan_layers=True, citation="Qwen2.5")
+
+
+def tiny_serving_model(rank: int = 16) -> ModelConfig:
+    """Small llama-family model for the CPU serving engine / benchmarks."""
+    return ModelConfig(
+        name="serve-tiny", family="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=1024,
+        dtype="float32", lora=LoRAConfig(rank=rank), scan_layers=True,
+        remat=False)

@@ -1,0 +1,229 @@
+"""Configuration system for the ForkKV framework.
+
+Every architecture in the zoo (dense / moe / ssm / hybrid / vlm / audio) is
+described by a single :class:`ModelConfig`.  Input shapes are described by
+:class:`ShapeConfig` and the production meshes by :class:`MeshConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Dtype = jnp.dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    """LoRA adapter configuration (paper §2.2)."""
+
+    rank: int = 16
+    alpha: float = 32.0
+    # Which projections carry adapters.  ForkKV disaggregates the KV cache,
+    # so k/v adapters are the interesting ones; q is applied on the fly.
+    targets: Tuple[str, ...] = ("q", "k", "v")
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description covering all six assigned families."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attn-free archs)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- attention flavour -------------------------------------------------
+    sliding_window: int = 0          # >0 -> sliding-window attention (SWA)
+    rope_theta: float = 10_000.0
+    use_rope: bool = True            # whisper uses learned abs. positions
+    max_position: int = 1_048_576
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0                # per-expert hidden (0 -> d_ff)
+    moe_interleave: int = 1          # every Nth layer is MoE (llama4: 2)
+    moe_shared_expert: bool = False  # always-on shared expert (llama4)
+    moe_capacity_factor: float = 1.25
+    # --- SSM (mamba2 SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_heads: int = 0               # mamba2 value heads
+    ssm_expand: int = 2
+    # --- hybrid (griffin / recurrentgemma) ----------------------------------
+    # block pattern, e.g. ("rglru", "rglru", "local") repeated.
+    block_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0               # RG-LRU recurrent width (0 -> d_model)
+    local_window: int = 0            # local attention window for hybrid
+    # --- enc-dec (whisper) ---------------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper: 30s audio -> 1500 frames
+    # --- modality frontend stub ----------------------------------------------
+    frontend: str = "none"           # none | vision_stub | audio_stub
+    num_patches: int = 0             # vlm: patch embeddings per image
+    # --- misc ----------------------------------------------------------------
+    mlp_activation: str = "silu"     # silu (swiglu) | gelu (plain 2-matmul)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    lora: LoRAConfig = dataclasses.field(default_factory=LoRAConfig)
+    # KV-cache quantization (beyond-paper, §Perf): "none" | "int8".
+    # int8 halves bCache bytes (the decode roofline's dominant term);
+    # rCache stays in model dtype (it is rank-r, ~1.5% of the cache).
+    kv_quant: str = "none"
+    # scan configuration for deep stacks: layers are scanned in
+    # (outer, inner) groups with remat on the inner scan.
+    scan_layers: bool = True
+    scan_groups: int = 0             # 0 -> single-level scan
+    optimizer: str = "adamw"         # adamw | adafactor
+    remat: bool = True
+    citation: str = ""
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def activation_dtype(self) -> Dtype:
+        return jnp.dtype(self.dtype)
+
+    @property
+    def num_params(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        d, L = self.d_model, self.num_layers
+        attn = d * (self.q_dim + 2 * self.kv_dim + self.q_dim)
+        if self.family == "ssm":
+            inner = self.ssm_expand * d
+            per_layer = d * (2 * inner + inner) + inner * self.ssm_state * 2
+            mlp = 0
+            attn = 0
+            per_layer += mlp
+            body = L * per_layer
+        else:
+            eff_ff = self.moe_d_ff or self.d_ff
+            n_mats = 3 if self.mlp_activation == "silu" else 2
+            if self.num_experts:
+                L_moe = L // self.moe_interleave
+                L_dense = L - L_moe
+                moe = self.num_experts * n_mats * d * eff_ff + \
+                    d * self.num_experts
+                if self.moe_shared_expert:
+                    moe += n_mats * d * eff_ff
+                mlp_total = L_moe * moe + L_dense * n_mats * d * self.d_ff
+                body = L * attn + mlp_total
+            else:
+                mlp = n_mats * d * self.d_ff
+                per_layer = attn + mlp
+                body = L * per_layer
+            if self.is_encoder_decoder:
+                # encoder layers + decoder cross-attention
+                body += self.num_encoder_layers * (attn + 2 * d * self.d_ff)
+                body += L * attn  # cross attn
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return body + embed
+
+    @property
+    def active_params(self) -> int:
+        """Active parameters per token (MoE: only routed experts)."""
+        if not self.num_experts:
+            return self.num_params
+        d, L = self.d_model, self.num_layers
+        L_moe = L // self.moe_interleave
+        eff_ff = self.moe_d_ff or self.d_ff
+        n_mats = 3 if self.mlp_activation == "silu" else 2
+        dense_moe = self.num_experts * n_mats * d * eff_ff
+        active_moe = self.num_experts_per_tok * n_mats * d * eff_ff
+        return self.num_params - L_moe * (dense_moe - active_moe)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown input shape {name!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh description (TPU v5e pods)."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# TPU v5e roofline constants (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving engine configuration (paper §6/§7)."""
+
+    page_size: int = 16              # tokens per KV block
+    max_pages: int = 4096            # pool capacity (per cache kind)
+    max_pages_per_req: int = 64      # block-table length (Smax/page)
+    max_batch: int = 64              # decode batch upper bound
+    max_prefill_tokens: int = 8192   # chunked-prefill budget per step
+    mode: str = "forkkv"             # forkkv | prefix | full_reuse
+    # beyond-paper features (DESIGN.md §9); defaults are paper-faithful.
+    broadcast_fork: bool = False
+    adaptive_fallback: bool = False
+    adaptive_high_watermark: float = 0.85

@@ -1,0 +1,88 @@
+"""Disaggregated KV cache math (paper §5.1).
+
+For a LoRA-adapted K/V projection ``Y = xW + (x A_i) B_i * s``:
+
+* ``bCache``: base projection.  For K, RoPE is applied *before* caching
+  (positions are absolute, so the cached entry is final).  For V the base
+  projection is cached as-is.
+* ``rCache``: the rank-r residual ``x A_i * s`` — stored WITHOUT RoPE
+  (dimension mismatch).  Reconstruction up-projects with ``B`` and applies
+  RoPE then (deferred RoPE, exact by linearity).
+
+This module is the *pure math* layer used by the model zoo, the Pallas kernel
+oracle and the tests; the serving runtime stores these tensors in paged pools.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import rope as rope_lib
+from repro.core.lora import LoRAWeights, lora_down, lora_up
+
+
+class DisaggKV(NamedTuple):
+    """Disaggregated cache entries for one attention layer / one request."""
+
+    k_base: jnp.ndarray    # (seq, kv_heads, head_dim)   — RoPE applied
+    v_base: jnp.ndarray    # (seq, kv_heads, head_dim)
+    k_res: jnp.ndarray     # (seq, r)                    — no RoPE, scaled
+    v_res: jnp.ndarray     # (seq, r)
+
+
+def project_base(x: jnp.ndarray, w_k: jnp.ndarray, w_v: jnp.ndarray,
+                 sin: jnp.ndarray, cos: jnp.ndarray,
+                 kv_heads: int, head_dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Base projections -> (k_base with RoPE, v_base). x: (..., seq, d)."""
+    k = (x @ w_k).reshape(x.shape[:-1] + (kv_heads, head_dim))
+    v = (x @ w_v).reshape(x.shape[:-1] + (kv_heads, head_dim))
+    k = rope_lib.apply_rope(k, sin, cos)
+    return k, v
+
+
+def project_residual(x: jnp.ndarray, lora_k: LoRAWeights,
+                     lora_v: LoRAWeights) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual (rCache) projections: ``x A * s`` for K and V."""
+    return lora_down(x, lora_k), lora_down(x, lora_v)
+
+
+def reconstruct_k(k_base: jnp.ndarray, k_res: jnp.ndarray,
+                  lora_k: LoRAWeights, sin: jnp.ndarray, cos: jnp.ndarray,
+                  kv_heads: int, head_dim: int) -> jnp.ndarray:
+    """K = K_base + RoPE(K_res @ B_k)  (paper Alg. 1 lines 8-9)."""
+    k_lora = lora_up(k_res, lora_k)
+    k_lora = k_lora.reshape(k_res.shape[:-1] + (kv_heads, head_dim))
+    k_lora = rope_lib.apply_rope(k_lora, sin, cos)
+    return (k_base + k_lora).astype(k_base.dtype)
+
+
+def reconstruct_v(v_base: jnp.ndarray, v_res: jnp.ndarray,
+                  lora_v: LoRAWeights, kv_heads: int,
+                  head_dim: int) -> jnp.ndarray:
+    """V = V_base + V_res @ B_v."""
+    v_lora = lora_up(v_res, lora_v)
+    v_lora = v_lora.reshape(v_res.shape[:-1] + (kv_heads, head_dim))
+    return (v_base + v_lora).astype(v_base.dtype)
+
+
+def unified_kv(x: jnp.ndarray, w_k: jnp.ndarray, w_v: jnp.ndarray,
+               lora_k: Optional[LoRAWeights], lora_v: Optional[LoRAWeights],
+               sin: jnp.ndarray, cos: jnp.ndarray,
+               kv_heads: int, head_dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The unified (baseline) cache: RoPE(xW_k + xA_kB_k), xW_v + xA_vB_v."""
+    k = x @ w_k
+    v = x @ w_v
+    if lora_k is not None:
+        k = k + lora_up(lora_down(x, lora_k), lora_k)
+    if lora_v is not None:
+        v = v + lora_up(lora_down(x, lora_v), lora_v)
+    k = k.reshape(x.shape[:-1] + (kv_heads, head_dim))
+    v = v.reshape(x.shape[:-1] + (kv_heads, head_dim))
+    k = rope_lib.apply_rope(k, sin, cos)
+    return k.astype(x.dtype), v.astype(x.dtype)
+
+
+def memory_ratio(n_agents: int, rank: int, kv_dim: int) -> float:
+    """Paper Eq. 3: M_R = 1/N + r/n."""
+    return 1.0 / n_agents + rank / kv_dim

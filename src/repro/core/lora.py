@@ -1,0 +1,96 @@
+"""LoRA runtime: parameter containers, initialization and batched application.
+
+The serving engine hosts many adapters on one base model (multi-LoRA).  For a
+batch whose rows may target *different* adapters we use a gather-then-einsum
+formulation (the JAX/TPU analogue of Punica's BGMV): adapter weights for the
+whole registry live in one stacked array, each row gathers its adapter id.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LoRAWeights(NamedTuple):
+    """One adapter for one linear projection: ``y = x @ A @ B * scaling``."""
+
+    a: jnp.ndarray   # (d_in, r)
+    b: jnp.ndarray   # (r, d_out)
+    scaling: float
+
+
+def init_lora(key: jax.Array, d_in: int, d_out: int, rank: int,
+              alpha: float = 32.0, dtype=jnp.bfloat16) -> LoRAWeights:
+    """Kaiming-init A, zero-init B (standard LoRA init)."""
+    a = jax.random.normal(key, (d_in, rank), dtype=jnp.float32) / jnp.sqrt(d_in)
+    b = jnp.zeros((rank, d_out), dtype=jnp.float32)
+    return LoRAWeights(a.astype(dtype), b.astype(dtype), alpha / rank)
+
+
+def init_lora_nonzero(key: jax.Array, d_in: int, d_out: int, rank: int,
+                      alpha: float = 32.0, dtype=jnp.bfloat16,
+                      scale: float = 0.05) -> LoRAWeights:
+    """Non-degenerate init used by tests/benchmarks so adapters actually
+    perturb activations (zero-init B makes ForkKV trivially exact)."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (d_in, rank), dtype=jnp.float32) / jnp.sqrt(d_in)
+    b = jax.random.normal(kb, (rank, d_out), dtype=jnp.float32) * scale / jnp.sqrt(rank)
+    return LoRAWeights(a.astype(dtype), b.astype(dtype), alpha / rank)
+
+
+def lora_apply(x: jnp.ndarray, w: LoRAWeights) -> jnp.ndarray:
+    """Full LoRA offset ``(x @ A) @ B * scaling``."""
+    return (x @ w.a @ w.b) * w.scaling
+
+
+def lora_down(x: jnp.ndarray, w: LoRAWeights) -> jnp.ndarray:
+    """Down-projection only — this is the rCache entry ``x @ A`` (paper §5.1).
+
+    The ``scaling`` factor is folded in here so the stored residual already
+    carries it; reconstruction is then a plain ``rCache @ B``.
+    """
+    return (x @ w.a) * w.scaling
+
+
+def lora_up(r: jnp.ndarray, w: LoRAWeights) -> jnp.ndarray:
+    """Up-projection of a stored residual: ``rCache @ B``."""
+    return r @ w.b
+
+
+class AdapterStack(NamedTuple):
+    """All adapters of a registry stacked for batched multi-LoRA execution."""
+
+    a: jnp.ndarray        # (n_adapters, d_in, r)
+    b: jnp.ndarray        # (n_adapters, r, d_out)
+    scaling: jnp.ndarray  # (n_adapters,)
+
+
+def stack_adapters(adapters: Dict[int, LoRAWeights]) -> AdapterStack:
+    ids = sorted(adapters)
+    assert ids == list(range(len(ids))), "adapter ids must be dense 0..n-1"
+    a = jnp.stack([adapters[i].a for i in ids])
+    b = jnp.stack([adapters[i].b for i in ids])
+    s = jnp.asarray([adapters[i].scaling for i in ids], dtype=jnp.float32)
+    return AdapterStack(a, b, s)
+
+
+def bgmv_down(x: jnp.ndarray, stack: AdapterStack,
+              adapter_ids: jnp.ndarray) -> jnp.ndarray:
+    """Batched multi-adapter down-projection.
+
+    x: (batch, seq, d_in); adapter_ids: (batch,) int32.
+    Returns (batch, seq, r) residuals with per-row adapters (scaling folded).
+    """
+    a = stack.a[adapter_ids]                       # (batch, d_in, r)
+    s = stack.scaling[adapter_ids]                 # (batch,)
+    r = jnp.einsum("bsd,bdr->bsr", x, a.astype(x.dtype))
+    return r * s[:, None, None].astype(x.dtype)
+
+
+def bgmv_up(r: jnp.ndarray, stack: AdapterStack,
+            adapter_ids: jnp.ndarray) -> jnp.ndarray:
+    """Batched multi-adapter up-projection. r: (batch, seq, rank) -> d_out."""
+    b = stack.b[adapter_ids]                       # (batch, r, d_out)
+    return jnp.einsum("bsr,brd->bsd", r, b.astype(r.dtype))

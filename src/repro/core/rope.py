@@ -1,0 +1,45 @@
+"""Rotary position embeddings with support for *deferred* application.
+
+ForkKV stores the base Key cache with RoPE already applied and the residual
+cache *without* RoPE (the rank-r output dimension of ``xA_i`` mismatches the
+rotation matrix).  RoPE is a per-position linear map, so
+``RoPE(K_base + K_lora) == RoPE(K_base) + RoPE(K_lora)`` — applying it to the
+up-projected residual at reconstruction time (paper Alg. 1, line 8) is exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_sincos(positions: jnp.ndarray, head_dim: int, theta: float = 10_000.0,
+                dtype=jnp.float32):
+    """Return (sin, cos) tables of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles).astype(dtype), jnp.cos(angles).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """Rotate ``x`` (..., seq, heads, head_dim) by per-position (sin, cos).
+
+    ``sin``/``cos`` have shape (..., seq, head_dim//2) and broadcast over the
+    heads axis.  Uses the "split-half" convention (first/second half pairs),
+    matching Llama-family checkpoints.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]   # broadcast over heads
+    cos = cos[..., None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def apply_rope_flat(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """Same as :func:`apply_rope` but for (..., seq, head_dim) (no heads axis)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

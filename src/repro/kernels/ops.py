@@ -1,0 +1,53 @@
+"""Public entry points for ResidualAttention.
+
+``residual_attention(...)`` dispatches between the Pallas kernel (TPU target,
+validated on CPU via ``interpret=True``) and the pure-jnp oracle in
+:mod:`repro.kernels.ref`.  The jitted model code calls these wrappers so the
+backend can be swapped with one flag.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels import residual_attention as ra
+
+# Backend selection: "pallas" (interpret on CPU, compiled on TPU) or "ref".
+_BACKEND = os.environ.get("REPRO_ATTN_BACKEND", "ref")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("pallas", "ref"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+                       *, qpos, kv_len, window: int = 0, causal: bool = True,
+                       scale: Optional[float] = None,
+                       backend: Optional[str] = None,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Attention over a disaggregated KV cache.  Shapes as in ref.py."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    be = backend or _BACKEND
+    if be == "ref":
+        return ref_mod.residual_attention_ref(
+            q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+            qpos=qpos, kv_len=kv_len, window=window, causal=causal,
+            scale=scale)
+    if q.shape[1] == 1:   # decode fast path
+        out = ra.residual_attention_decode(
+            q[:, 0], k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+            kv_len, scale=scale, window=window, interpret=interpret)
+        return out[:, None]
+    return ra.residual_attention_prefill(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len,
+        scale=scale, causal=causal, window=window, interpret=interpret)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for ResidualAttention (paper §5.3, Algorithm 1).
+
+Computes attention over a *disaggregated* KV cache:
+
+    K = K_base + RoPE(K_res @ B_k)
+    V = V_base + V_res @ B_v
+    O = softmax(Q K^T / sqrt(d)) V
+
+The kernel implements this with on-chip reconstruction and a dual
+accumulator; the oracle materializes everything, which is exactly the
+"naive HBM reconstruction" the paper argues against — perfect as a
+correctness reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import attention as attn_lib
+from repro.core import rope as rope_lib
+
+
+def reconstruct(k_base, v_base, k_res, v_res, b_k, b_v, sin, cos):
+    """Materialize full K, V from disaggregated parts.
+
+    k_base/v_base: (B, Sk, Hkv, D); k_res/v_res: (B, Sk, R)
+    b_k/b_v: (B, R, Hkv*D) per-request adapter up-projections
+    sin/cos: (B, Sk, D//2)
+    """
+    bsz, sk, hkv, d = k_base.shape
+    k_lora = jnp.einsum("bsr,brn->bsn", k_res.astype(jnp.float32),
+                        b_k.astype(jnp.float32)).reshape(bsz, sk, hkv, d)
+    k_lora = rope_lib.apply_rope(k_lora, sin, cos)
+    v_lora = jnp.einsum("bsr,brn->bsn", v_res.astype(jnp.float32),
+                        b_v.astype(jnp.float32)).reshape(bsz, sk, hkv, d)
+    k = k_base.astype(jnp.float32) + k_lora
+    v = v_base.astype(jnp.float32) + v_lora
+    return k.astype(k_base.dtype), v.astype(v_base.dtype)
+
+
+def residual_attention_ref(q, k_base, v_base, k_res, v_res, b_k, b_v,
+                           sin, cos, *, qpos: jnp.ndarray,
+                           kv_len: Optional[jnp.ndarray] = None,
+                           window: int = 0, causal: bool = True,
+                           scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference residual attention.
+
+    q: (B, Sq, Hq, D) — RoPE already applied (queries are computed fresh).
+    qpos: (B, Sq) absolute positions of the query rows.
+    kv_len: (B,) valid cache lengths (<= Sk).
+    Returns (B, Sq, Hq, D).
+    """
+    k, v = reconstruct(k_base, v_base, k_res, v_res, b_k, b_v, sin, cos)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = attn_lib._gqa_scores(q, k) * scale          # (B, Hq, Sq, Sk)
+    kpos = jnp.arange(k.shape[1])[None, None, None, :]
+    qp = qpos[:, None, :, None]
+    mask = jnp.ones(s.shape, dtype=bool)
+    if causal:
+        mask &= kpos <= qp
+    if window > 0:
+        mask &= kpos > qp - window
+    if kv_len is not None:
+        mask &= kpos < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, attn_lib.NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return attn_lib._gqa_out(p, v).astype(q.dtype)

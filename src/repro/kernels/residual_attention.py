@@ -1,0 +1,327 @@
+"""ResidualAttention — Pallas TPU kernels (paper §5.3, Algorithm 1).
+
+Flash-attention-style kernels that compute attention directly over the
+*disaggregated* KV cache, reconstructing K on-chip and deferring the V
+up-projection out of the online-softmax loop:
+
+  Stage 1 (per KV block, in VMEM):  K = K_base + RoPE(K_res @ B_k)
+  Stage 2 (online softmax):         acc   += P @ V_base      (M x D)
+                                    acc_r += P @ V_res       (M x R)
+  Stage 3 (once, at loop exit):     O = (acc + acc_r @ B_v) / l
+
+TPU adaptation of the paper's Triton kernel (see DESIGN.md §3): the KV-block
+loop is the innermost grid dimension (TPU executes the grid sequentially per
+core), so the softmax state (m, l, acc, acc_r) lives in VMEM scratch across
+iterations.  Matmuls use f32 accumulation on the MXU.  Validated on CPU with
+``interpret=True``; block shapes are (8,128)-aligned for the MXU when the
+inputs allow it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INIT = -1e30
+
+
+def _rope_flat(x, sin, cos):
+    half = x.shape[-1] // 2
+    x1, x2 = x[:, :half], x[:, half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Prefill kernel
+# --------------------------------------------------------------------------
+def _prefill_kernel(qpos_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
+                    vr_ref, bk_ref, bv_ref, sin_ref, cos_ref, out_ref,
+                    m_scr, l_scr, acc_scr, accr_scr, *, scale: float,
+                    causal: bool, window: int, block_k: int):
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+    g, bm, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = g * bm
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accr_scr[...] = jnp.zeros_like(accr_scr)
+
+    # ---- Stage 1: on-the-fly K reconstruction with deferred RoPE ----------
+    k_b = kb_ref[0, 0].astype(jnp.float32)                 # (BN, D)
+    k_r = kr_ref[0].astype(jnp.float32)                    # (BN, R)
+    b_k = bk_ref[0, 0].astype(jnp.float32)                 # (R, D)
+    sin = sin_ref[0].astype(jnp.float32)                   # (BN, D/2)
+    cos = cos_ref[0].astype(jnp.float32)
+    k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
+    k = k_b + _rope_flat(k_lora, sin, cos)                 # (BN, D)
+
+    # ---- Stage 2: separate attention scores (base / residual) -------------
+    q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)   # (G*BM, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qp = qpos_ref[0].astype(jnp.int32)                     # (BM,)
+    rowpos = jnp.broadcast_to(qp[None, :], (g, bm)).reshape(rows, 1)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, s.shape[1]), 1)
+    mask = kpos < kvlen_ref[0, 0]
+    if causal:
+        mask = mask & (kpos <= rowpos)
+    if window > 0:
+        mask = mask & (kpos > rowpos - window)
+    s = jnp.where(mask, s, NEG_INIT)
+
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * mask                          # masked probs
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    v_b = vb_ref[0, 0].astype(jnp.float32)                 # (BN, D)
+    v_r = vr_ref[0].astype(jnp.float32)                    # (BN, R)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_b, preferred_element_type=jnp.float32)
+    accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
+        p, v_r, preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    # ---- Stage 3: fuse via matrix associativity (once, at loop exit) ------
+    @pl.when(j == nj - 1)
+    def _fini():
+        b_v = bv_ref[0, 0].astype(jnp.float32)             # (R, D)
+        acc = acc_scr[...] + jnp.dot(accr_scr[...], b_v,
+                                     preferred_element_type=jnp.float32)
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        out = (acc / l).reshape(g, bm, d)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "block_q", "block_k",
+                     "interpret"))
+def residual_attention_prefill(q, k_base, v_base, k_res, v_res, b_k, b_v,
+                               sin, cos, qpos, kv_len, *, scale: float,
+                               causal: bool = True, window: int = 0,
+                               block_q: int = DEFAULT_BLOCK_Q,
+                               block_k: int = DEFAULT_BLOCK_K,
+                               interpret: bool = True):
+    """Prefill ResidualAttention.
+
+    q:           (B, Sq, Hq, D)   RoPE'd queries
+    k_base:      (B, Sk, Hkv, D)  RoPE'd base keys
+    v_base:      (B, Sk, Hkv, D)
+    k_res/v_res: (B, Sk, R)       scaled LoRA residuals (no RoPE)
+    b_k/b_v:     (B, R, Hkv*D)    per-request up-projections
+    sin/cos:     (B, Sk, D//2)    RoPE tables for *cache* positions
+    qpos:        (B, Sq) int32    absolute positions of query rows
+    kv_len:      (B,) int32       valid cache length per request
+    Returns (B, Sq, Hq, D).
+    """
+    bsz, sq, hq, d = q.shape
+    sk, hkv = k_base.shape[1], k_base.shape[2]
+    g = hq // hkv
+    r = k_res.shape[-1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+
+    # pad seq dims to block multiples
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pq)))
+    if pk:
+        k_base = jnp.pad(k_base, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v_base = jnp.pad(v_base, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_res = jnp.pad(k_res, ((0, 0), (0, pk), (0, 0)))
+        v_res = jnp.pad(v_res, ((0, 0), (0, pk), (0, 0)))
+        sin = jnp.pad(sin, ((0, 0), (0, pk), (0, 0)))
+        cos = jnp.pad(cos, ((0, 0), (0, pk), (0, 0)))
+    sqp, skp = sq + pq, sk + pk
+
+    # layouts: q -> (B, Hkv, G, Sq, D); kv -> (B, Hkv, Sk, D)
+    qt = q.reshape(bsz, sqp, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kbt = k_base.transpose(0, 2, 1, 3)
+    vbt = v_base.transpose(0, 2, 1, 3)
+    bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)   # (B,Hkv,R,D)
+    bvt = b_v.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+    kvl = kv_len.reshape(bsz, 1).astype(jnp.int32)
+
+    grid = (bsz, hkv, sqp // block_q, skp // block_k)
+    half = d // 2
+    kernel = functools.partial(_prefill_kernel, scale=scale, causal=causal,
+                               window=window, block_k=block_k)
+    out = _call_prefill(kernel, grid, qpos, kvl, qt, kbt, vbt,
+                        k_res, v_res, bkt, bvt, sin, cos,
+                        bsz, hkv, g, sqp, d, r, block_q, block_k,
+                        half, q.dtype, interpret)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(bsz, sqp, hq, d)
+    return out[:, :sq]
+
+
+def _call_prefill(kernel, grid, qpos, kvl, qt, kbt, vbt, k_res, v_res, bkt,
+                  bvt, sin, cos, bsz, hkv, g, sqp, d, r, block_q, block_k,
+                  half, dtype, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+    rows = g * block_q
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
+            pl.BlockSpec((1, 1, g, block_q, d), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, block_k, r), lambda b, h, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, r), lambda b, h, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda b, h, i, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda b, h, i, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, half), lambda b, h, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, half), lambda b, h, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, block_q, d),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sqp, d), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),   # m
+            pltpu.VMEM((rows, 128), jnp.float32),   # l
+            pltpu.VMEM((rows, d), jnp.float32),     # acc
+            pltpu.VMEM((rows, r), jnp.float32),     # acc_r
+        ],
+        interpret=interpret,
+    )(qpos, kvl, qt, kbt, vbt, k_res, v_res, bkt, bvt, sin, cos)
+
+
+# --------------------------------------------------------------------------
+# Decode kernel (Sq == 1)
+# --------------------------------------------------------------------------
+def _decode_kernel(kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref, vr_ref, bk_ref,
+                   bv_ref, sin_ref, cos_ref, out_ref, m_scr, l_scr, acc_scr,
+                   accr_scr, *, scale: float, window: int, block_k: int):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g, d = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accr_scr[...] = jnp.zeros_like(accr_scr)
+
+    k_b = kb_ref[0, 0].astype(jnp.float32)
+    k_r = kr_ref[0].astype(jnp.float32)
+    b_k = bk_ref[0, 0].astype(jnp.float32)
+    sin = sin_ref[0].astype(jnp.float32)
+    cos = cos_ref[0].astype(jnp.float32)
+    k = k_b + _rope_flat(
+        jnp.dot(k_r, b_k, preferred_element_type=jnp.float32), sin, cos)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    kvlen = kvlen_ref[0, 0]
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, s.shape[1]), 1)
+    mask = kpos < kvlen                                    # causal: qpos = kvlen-1
+    if window > 0:
+        mask = mask & (kpos > kvlen - 1 - window)
+    s = jnp.where(mask, s, NEG_INIT)
+
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * mask
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    v_b = vb_ref[0, 0].astype(jnp.float32)
+    v_r = vr_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_b, preferred_element_type=jnp.float32)
+    accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
+        p, v_r, preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        b_v = bv_ref[0, 0].astype(jnp.float32)
+        acc = acc_scr[...] + jnp.dot(accr_scr[...], b_v,
+                                     preferred_element_type=jnp.float32)
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        out_ref[0, 0] = (acc / l).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "block_k", "interpret"))
+def residual_attention_decode(q, k_base, v_base, k_res, v_res, b_k, b_v,
+                              sin, cos, kv_len, *, scale: float,
+                              window: int = 0,
+                              block_k: int = DEFAULT_BLOCK_K,
+                              interpret: bool = True):
+    """Decode-phase ResidualAttention: one query token per request.
+
+    q: (B, Hq, D); caches as in prefill; returns (B, Hq, D).
+    """
+    bsz, hq, d = q.shape
+    sk, hkv = k_base.shape[1], k_base.shape[2]
+    g = hq // hkv
+    r = k_res.shape[-1]
+    block_k = min(block_k, sk)
+    pk = (-sk) % block_k
+    if pk:
+        k_base = jnp.pad(k_base, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v_base = jnp.pad(v_base, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_res = jnp.pad(k_res, ((0, 0), (0, pk), (0, 0)))
+        v_res = jnp.pad(v_res, ((0, 0), (0, pk), (0, 0)))
+        sin = jnp.pad(sin, ((0, 0), (0, pk), (0, 0)))
+        cos = jnp.pad(cos, ((0, 0), (0, pk), (0, 0)))
+    skp = sk + pk
+
+    from jax.experimental.pallas import tpu as pltpu
+    qt = q.reshape(bsz, hkv, g, d)
+    kbt = k_base.transpose(0, 2, 1, 3)
+    vbt = v_base.transpose(0, 2, 1, 3)
+    bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+    bvt = b_v.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+    kvl = kv_len.reshape(bsz, 1).astype(jnp.int32)
+    half = d // 2
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bsz, hkv, skp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, block_k, r), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, r), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, half), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, half), lambda b, h, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kvl, qt, kbt, vbt, k_res, v_res, bkt, bvt, sin, cos)
+    return out.reshape(bsz, hq, d)

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init) — this module is the only place that forces 512
+# placeholder devices; tests and benchmarks see the real single CPU device.
+
+# Multi-pod dry-run driver.
+#
+# For every (architecture x input shape x mesh) combination this lowers and
+# compiles the corresponding step (train / prefill / serve) against the
+# production mesh — 16x16 single-pod and 2x16x16 multi-pod — using
+# ShapeDtypeStruct inputs (no allocation), then records
+# ``memory_analysis()`` / ``cost_analysis()`` and the roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+#       --mesh single --out experiments/dryrun_single.json
+# (no `from __future__` here: the XLA_FLAGS lines must be the first
+#  statements in the file, which rules out __future__ imports)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfg_lib
+from repro.core.config import INPUT_SHAPES, shape_by_name
+from repro.launch import roofline as rf
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); D = tokens/step."""
+    n = cfg.active_params
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/request
+
+
+def run_pair(arch: str, shape_name: str, mesh, chips: int,
+             verbose: bool = True, strategy: str = "baseline") -> dict:
+    cfg = cfg_lib.get_config(arch)
+    shape = shape_by_name(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "chips": chips,
+           "mode": shape.mode}
+    if not cfg_lib.shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch; long_500k requires " \
+                        "sub-quadratic attention (DESIGN.md §5)"
+        return rec
+    if strategy == "optimized" and shape.mode == "decode" and \
+            cfg.family in ("dense", "moe", "vlm"):
+        # beyond-paper: int8 bCache halves the decode memory term
+        # (accuracy validated in tests/test_models.py::test_int8_kv_cache)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    t0 = time.time()
+    try:
+        built = steps_lib.build_step(cfg, mesh, shape, strategy=strategy)
+        with mesh:
+            lowered = built.step_fn.lower(*built.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        analysis = rf.analyze_compiled(lowered, compiled, chips,
+                                       model_flops_for(cfg, shape))
+        # analytic model: primary roofline source (HLO cost_analysis counts
+        # scan bodies once — see launch/analytic.py docstring)
+        from repro.launch import analytic as ana_lib
+        ana = ana_lib.analytic_costs(cfg, shape, mesh, strategy=strategy)
+        ana_terms = rf.roofline_terms(ana["flops_dev"], ana["bytes_dev"],
+                                      ana["coll_bytes_dev"], chips)
+        mf = model_flops_for(cfg, shape)
+        ana["useful_fraction"] = mf / ana["flops_global"] \
+            if ana["flops_global"] else 0.0
+        analysis["analytic"] = {**ana, "terms": ana_terms}
+        mem = analysis.get("memory", {})
+        if verbose:
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops={analysis['flops']:.3e} "
+                  f"bytes={analysis['bytes_accessed']:.3e} "
+                  f"coll={analysis['collectives']['total']:.3e}")
+        rec.update(status="ok", description=built.description,
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   **analysis)
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    archs = list(cfg_lib.ARCH_IDS) if args.arch == "all" else \
+        args.arch.split(",")
+    shapes = [s.name for s in INPUT_SHAPES] if args.shape == "all" else \
+        args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        chips = mesh.devices.size
+        for arch in archs:
+            for shape in shapes:
+                tag = f"[{'multi' if multi else 'single'}-pod] {arch} × {shape}"
+                print(f"== {tag}", flush=True)
+                rec = run_pair(arch, shape, mesh, chips,
+                               strategy=args.strategy)
+                rec["mesh"] = "multi" if multi else "single"
+                rec["strategy"] = args.strategy
+                if rec["status"] == "ok":
+                    t = rec["analytic"]["terms"]
+                    print(f"  OK lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"analytic: dominant={t['dominant']} "
+                          f"compute={t['compute_s']:.2e}s "
+                          f"memory={t['memory_s']:.2e}s "
+                          f"collective={t['collective_s']:.2e}s", flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"  SKIP: {rec['reason']}", flush=True)
+                else:
+                    print(f"  FAIL: {rec['error']}", flush=True)
+                results.append(rec)
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== done: {ok} ok, {sk} skipped, {err} failed")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        slim = [{k: v for k, v in r.items() if k != "traceback"}
+                for r in results]
+        with open(args.out, "w") as f:
+            json.dump(slim, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

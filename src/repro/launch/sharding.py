@@ -1,0 +1,192 @@
+"""Logical-to-physical sharding rules (MaxText-style) with divisibility
+fallback.
+
+Every model exposes pytrees of *logical axis names* per parameter/cache dim
+(``repro.models.*.logical_axes``).  ``tree_shardings`` turns those into
+NamedShardings for a concrete mesh: each dim takes the first rule candidate
+whose mesh axes (a) exist in the mesh, (b) are not already used by another
+dim of the same tensor, and (c) divide the dim size.  Non-divisible dims
+fall through — e.g. llama4's 40 q-heads are not divisible by model=16, so
+the model axis lands on head_dim (or the ff dim) instead of failing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Rule table: logical axis -> priority list of candidates; each candidate is
+# a tuple of mesh axes that shard the dim jointly.
+DEFAULT_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "vocab": (("model",),),
+    "q_out": (("model",),),
+    "kv_out": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "kv_head_dim": (("model",),),        # fallback when kv_heads indivisible
+    "ff": (("model",),),
+    "expert_w": ((),),                   # tensor-parallel MoE: shard ff, not E
+    "embed": (("data",),),               # FSDP
+    "embed_pod": (("pod", "data"), ("data",)),   # 405B-class FSDP
+    "rank": ((),),
+    "inner": (("model",),),
+    "inner_in": ((),),
+    "inner_head": (("model",),),
+    "state": ((),),
+    "layers": ((),),
+    None: ((),),
+}
+
+
+BIG_MODEL = 5e10      # params above which weights cannot replicate over data
+SMALL_MODEL = 1e9     # params below which weights replicate on every chip
+
+# Sharding strategy: "baseline" is the paper-faithful first implementation
+# (FSDP over data + tensor parallel over model for train/prefill);
+# "optimized" applies the §Perf hillclimbing results:
+#   * small-model train: pure data parallelism over ALL mesh axes (the
+#     16-way TP all-reduces dominated tiny models' rooflines),
+#   * sub-50B prefill: FSDP over the model axis instead of TP (one weight
+#     all-gather per layer amortizes over 32k tokens; activation
+#     all-reduces do not).
+STRATEGIES = ("baseline", "optimized")
+
+
+def rules_for(cfg, purpose: str = "train",
+              strategy: str = "baseline") -> Dict[
+        Optional[str], Tuple[Tuple[str, ...], ...]]:
+    """Sharding rule table per (model size, step purpose).
+
+    train/prefill: FSDP — weights sharded on the embed dim over data
+      (+pod for 405B-class) and on heads/ff over model; batch over pod+data.
+      The per-layer weight all-gather amortizes over S tokens.
+    decode small:  weights replicated over data (they fit), model-parallel
+      over model; batch + KV cache over data.  No per-step param collectives.
+    decode big:    2D tensor parallel — weight output dims sharded over
+      (pod×data×model) jointly so 405B-class weights fit; batch replicated
+      for weights, KV cache still batch-sharded over data (+head_dim over
+      model).  Per-step collectives are small decode activations.
+    """
+    rules = dict(DEFAULT_RULES)
+    big = cfg is not None and cfg.num_params > BIG_MODEL
+    small = cfg is not None and cfg.num_params < SMALL_MODEL
+    if strategy == "optimized" and cfg is not None:
+        tp_axes = ("ff", "q_out", "kv_out", "inner", "inner_head", "vocab",
+                   "kv_heads", "kv_head_dim")
+        if purpose == "train" and small:
+            for ax in tp_axes:
+                rules[ax] = ((),)
+            rules["embed"] = ((),)
+            rules["batch"] = (("pod", "data", "model"), ("pod", "data"),
+                              ("data", "model"), ("data",))
+            return rules
+        if purpose == "prefill" and not big:
+            for ax in ("ff", "q_out", "kv_out", "inner", "inner_head"):
+                rules[ax] = ((),)
+            rules["vocab"] = (("model",),)     # keep logits sharded
+            rules["embed"] = (("model",), ("data",))
+            return rules
+    if purpose == "decode":
+        rules["embed"] = ((),)                      # no per-step FSDP gather
+        if big:
+            two_d = (("pod", "data", "model"), ("data", "model"), ("model",))
+            for ax in ("q_out", "kv_out", "ff", "vocab", "inner"):
+                rules[ax] = two_d
+    else:
+        if cfg is not None and cfg.num_params > 2e11:
+            # 405B-class: fp32 optimizer state needs pod+data FSDP
+            rules["embed"] = (("pod", "data"), ("data",))
+    return rules
+
+
+def spec_for_axes(axes: Optional[Sequence[Optional[str]]],
+                  shape: Tuple[int, ...], mesh_sizes: Dict[str, int],
+                  rules) -> P:
+    if axes is None:
+        return P()
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        chosen = None
+        for cand in rules.get(name, ((),)):
+            if not cand:
+                break
+            if any(a not in mesh_sizes or a in used for a in cand):
+                continue
+            size = math.prod(mesh_sizes[a] for a in cand)
+            if size > 1 and dim % size == 0:
+                chosen = cand
+                used.update(cand)
+                break
+        if chosen is None:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(tuple(chosen))
+    # strip trailing Nones for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, axes_tree, cfg=None,
+                   purpose: str = "train", strategy: str = "baseline"):
+    """NamedSharding pytree for (shapes_tree, axes_tree).
+
+    shapes_tree: pytree of arrays or ShapeDtypeStructs.
+    axes_tree: matching pytree whose leaves are tuples of logical axis
+    names (or None).  Tuples are leaves here, so we flatten shapes_tree and
+    pair leaves positionally.
+    """
+    rules = rules_for(cfg, purpose, strategy)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    shape_leaves, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    out = []
+    for leaf, axes in zip(shape_leaves, axes_leaves):
+        spec = spec_for_axes(axes, tuple(leaf.shape), sizes, rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def vector_sharding(mesh: Mesh, batch: int, cfg=None,
+                    purpose: str = "train",
+                    strategy: str = "baseline") -> NamedSharding:
+    """Sharding for (batch,)-shaped step vectors (tokens, kv_len, ids),
+    respecting divisibility of the actual batch size."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = rules_for(cfg, purpose, strategy)
+    spec = spec_for_axes(("batch",), (batch,), sizes, rules)
+    return NamedSharding(mesh, spec)
+
+
+def batch_sharding_for(mesh: Mesh, batch: int) -> Tuple[Any, ...]:
+    """The mesh axes actually usable for a given global batch size."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for cand in (("pod", "data"), ("data",)):
+        if all(a in sizes for a in cand):
+            size = math.prod(sizes[a] for a in cand)
+            if batch % size == 0 and size > 1:
+                return cand
+    return ()
+
+
+def input_shardings(mesh: Mesh, specs: Dict[str, jax.ShapeDtypeStruct],
+                    cfg=None, purpose: str = "train",
+                    strategy: str = "baseline"):
+    """Shardings for the per-step data inputs from configs.input_specs."""
+    out = {}
+    rules = rules_for(cfg, purpose, strategy)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, s in specs.items():
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[name] = NamedSharding(
+            mesh, spec_for_axes(axes, tuple(s.shape), sizes, rules))
+    return out

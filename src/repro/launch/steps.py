@@ -1,0 +1,180 @@
+"""Step builders for the multi-pod dry-run and real launchers.
+
+For each (architecture × input shape) this constructs:
+  * abstract state (params / optimizer / LoRA stacks / KV caches) via
+    ``jax.eval_shape`` — ShapeDtypeStructs only, no allocation,
+  * NamedShardings from the model's logical axes + the rule table,
+  * the jit'd step with in/out shardings ready to ``.lower().compile()``.
+
+train_4k   -> train_step   (loss + grads + optimizer update)
+prefill_32k-> prefill_step (populate disaggregated cache, argmax logits)
+decode_*   -> serve_step   (ONE token against a seq_len cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.launch import sharding as shd
+from repro.models.registry import get_model
+from repro.training import optimizer as opt_lib
+from repro.training import train_loop
+
+N_ADAPTERS = 8          # concurrent agents in the serving dry-run
+# gradient-accumulation microbatches per train step: 16 keeps the local
+# microbatch at 1 sequence per chip (256 global / 16 data shards / 16),
+# bounding activation temps; see EXPERIMENTS.md §Perf for the trade-off
+DEFAULT_ACCUM = 16
+ACCUM_STEPS = {}
+
+
+def accum_for(cfg, strategy: str = "baseline") -> int:
+    # optimized strategy, small models: activations fit without microbatching
+    # and every accumulation pass re-streams the (replicated) weights
+    if strategy == "optimized" and cfg.num_params < 1e9:
+        return 1
+    return ACCUM_STEPS.get(cfg.name, DEFAULT_ACCUM)
+
+_KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+class BuiltStep(NamedTuple):
+    step_fn: Any            # jit'd function (with shardings)
+    abstract_args: tuple    # SDS pytrees to .lower() with
+    description: str
+
+
+def _opt_axes(cfg: ModelConfig, param_axes):
+    inner = opt_lib.opt_state_logical_axes(cfg.optimizer, param_axes)
+    return opt_lib.OptState(step=None, inner=inner)
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                     strategy: str = "baseline") -> BuiltStep:
+    api = get_model(cfg)
+    accum = accum_for(cfg, strategy)
+    init_opt, step = train_loop.make_train_step(cfg, accum_steps=accum)
+
+    params_sds = jax.eval_shape(api.init_params, _KEY)
+    opt_sds = jax.eval_shape(init_opt, params_sds)
+    batch_sds = cfg_lib.input_specs(cfg, shape)
+
+    p_axes = api.logical_axes()
+    params_sh = shd.tree_shardings(mesh, params_sds, p_axes, cfg, "train",
+                                   strategy)
+    opt_sh = shd.tree_shardings(mesh, opt_sds, _opt_axes(cfg, p_axes), cfg,
+                                "train", strategy)
+    batch_sh = shd.input_shardings(mesh, batch_sds, cfg, "train", strategy)
+
+    jit_step = jax.jit(step,
+                       in_shardings=(params_sh, opt_sh, batch_sh),
+                       out_shardings=(params_sh, opt_sh, None),
+                       donate_argnums=(0, 1))
+    return BuiltStep(jit_step, (params_sds, opt_sds, batch_sds),
+                     f"train_step accum={accum} opt={cfg.optimizer}")
+
+
+def _lora_state(cfg: ModelConfig, api, mesh, purpose: str,
+                strategy: str = "baseline"):
+    if api.init_lora_stacks is None:
+        return None, None
+    lora_sds = jax.eval_shape(
+        functools.partial(api.init_lora_stacks, n=N_ADAPTERS), _KEY)
+    lora_sh = shd.tree_shardings(mesh, lora_sds, api.lora_logical_axes(),
+                                 cfg, purpose, strategy)
+    return lora_sds, lora_sh
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                       disagg: Optional[bool] = None,
+                       strategy: str = "baseline") -> BuiltStep:
+    api = get_model(cfg)
+    disagg = api.supports_forkkv if disagg is None else disagg
+    B, S = shape.global_batch, shape.seq_len
+
+    params_sds = jax.eval_shape(api.init_params, _KEY)
+    params_sh = shd.tree_shardings(mesh, params_sds, api.logical_axes(), cfg,
+                                   "prefill", strategy)
+    lora_sds, lora_sh = _lora_state(cfg, api, mesh, "prefill", strategy)
+    batch_sds = cfg_lib.input_specs(cfg, shape)
+    batch_sh = shd.input_shardings(mesh, batch_sds, cfg, "prefill", strategy)
+
+    cache_sds = jax.eval_shape(
+        functools.partial(api.init_cache, B, S, disagg=disagg))
+    cache_sh = shd.tree_shardings(mesh, cache_sds,
+                                  api.cache_logical_axes(disagg=disagg), cfg,
+                                  "prefill", strategy)
+    ids_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    ids_sh = shd.vector_sharding(mesh, B, cfg, "prefill", strategy)
+
+    def prefill_step(params, lora, batch, adapter_ids):
+        cache = api.init_cache(B, S, disagg=disagg)
+        kwargs = {}
+        if "extra_embeds" in batch:
+            kwargs["extra_embeds"] = batch["extra_embeds"]
+        if lora is not None:
+            kwargs.update(lora=lora, adapter_ids=adapter_ids, disagg=disagg)
+        logits, cache = api.prefill(params, batch["tokens"], cache, **kwargs)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    jit_step = jax.jit(prefill_step,
+                       in_shardings=(params_sh, lora_sh, batch_sh, ids_sh),
+                       out_shardings=(ids_sh, cache_sh))
+    return BuiltStep(jit_step, (params_sds, lora_sds, batch_sds, ids_sds),
+                     f"prefill_step disagg={disagg}")
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                     disagg: Optional[bool] = None,
+                     strategy: str = "baseline") -> BuiltStep:
+    """Decode: ONE new token with a KV cache of shape.seq_len."""
+    api = get_model(cfg)
+    disagg = api.supports_forkkv if disagg is None else disagg
+    B, S = shape.global_batch, shape.seq_len
+
+    params_sds = jax.eval_shape(api.init_params, _KEY)
+    params_sh = shd.tree_shardings(mesh, params_sds, api.logical_axes(), cfg,
+                                   "decode", strategy)
+    lora_sds, lora_sh = _lora_state(cfg, api, mesh, "decode", strategy)
+
+    cache_sds = jax.eval_shape(
+        functools.partial(api.init_cache, B, S, disagg=disagg))
+    cache_sh = shd.tree_shardings(mesh, cache_sds,
+                                  api.cache_logical_axes(disagg=disagg), cfg,
+                                  "decode", strategy)
+    tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    vec_sh = shd.vector_sharding(mesh, B, cfg, "decode", strategy)
+
+    def serve_step(params, lora, cache, tokens, kv_len, adapter_ids):
+        kwargs = {}
+        if lora is not None:
+            kwargs.update(lora=lora, adapter_ids=adapter_ids, disagg=disagg)
+        logits, cache = api.decode_step(params, tokens, cache, kv_len,
+                                        **kwargs)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    jit_step = jax.jit(serve_step,
+                       in_shardings=(params_sh, lora_sh, cache_sh, vec_sh,
+                                     vec_sh, vec_sh),
+                       out_shardings=(vec_sh, cache_sh),
+                       donate_argnums=(2,))
+    return BuiltStep(
+        jit_step,
+        (params_sds, lora_sds, cache_sds, tok_sds, len_sds, tok_sds),
+        f"serve_step disagg={disagg} cache_len={S}")
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+               **kw) -> BuiltStep:
+    if shape.mode == "train":
+        kw.pop("disagg", None)
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

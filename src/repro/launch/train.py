@@ -1,0 +1,71 @@
+"""Training launcher.
+
+CPU-scale real run:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --tiny --steps 50 --batch 8 --seq 128
+
+Production mesh dry-run of the same step is `repro.launch.dryrun`.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.models.registry import get_model
+from repro.training import checkpoint, data, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(cfg_lib.ARCH_IDS))
+    ap.add_argument("--tiny", action="store_true",
+                    help="use the reduced smoke-test variant (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = cfg_lib.get_tiny_config(args.arch) if args.tiny \
+        else cfg_lib.get_config(args.arch)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    init_opt, step = train_loop.make_train_step(cfg, lr=args.lr)
+    opt = init_opt(params)
+    jstep = jax.jit(step)
+    stream = data.make_stream(cfg.vocab_size, args.seq, args.batch)
+
+    extra = None
+    if cfg.frontend == "vision_stub":
+        extra = jnp.zeros((args.batch, min(cfg.num_patches, 8), cfg.d_model),
+                          cfg.activation_dtype)
+    if cfg.frontend == "audio_stub":
+        extra = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
+                          cfg.activation_dtype)
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), stream):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        if extra is not None:
+            b["extra_embeds"] = extra
+            if cfg.frontend == "vision_stub":
+                b["tokens"] = b["tokens"]
+                b["labels"] = b["labels"]
+        params, opt, m = jstep(params, opt, b)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt_dir:
+        path = checkpoint.save(params, args.ckpt_dir, f"{cfg.name}-final")
+        print(f"saved {path}")
+
+
+if __name__ == "__main__":
+    main()

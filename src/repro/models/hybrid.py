@@ -1,0 +1,296 @@
+"""Griffin-style hybrid blocks (RecurrentGemma): RG-LRU + local attention.
+
+Layer pattern (cfg.block_pattern, default ("rglru", "rglru", "local")) is
+tiled over cfg.num_layers.  RG-LRU layers carry a fixed-size recurrent state
+(no KV cache → ForkKV N/A, DESIGN.md §5); local-attention layers use a
+sliding-window ring KV cache where ForkKV's disaggregation DOES apply — they
+reuse the transformer attention implementation including LoRA + rCache.
+[arXiv:2402.19427]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import base
+from repro.models import transformer as tfm
+
+Params = Dict[str, Any]
+
+LRU_C = 8.0
+
+
+def layer_kinds(cfg: ModelConfig):
+    pat = cfg.block_pattern or ("rglru", "rglru", "local")
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = cfg.activation_dtype
+    d = cfg.d_model
+    w = _lru_width(cfg)
+    kinds = layer_kinds(cfg)
+    ks = iter(base.split_keys(key, 12 * cfg.num_layers + 8))
+    layers = []
+    for kind in kinds:
+        l: Params = {"ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt)}
+        if kind == "rglru":
+            l.update({
+                "w_gelu": base.dense_init(next(ks), (d, w), dt),
+                "w_rec": base.dense_init(next(ks), (d, w), dt),
+                "conv_w": base.dense_init(next(ks), (4, w), dt, 0.2),
+                "conv_b": jnp.zeros((w,), dt),
+                "w_rgate": base.dense_init(next(ks), (w, w), dt),
+                "b_rgate": jnp.zeros((w,), jnp.float32),
+                "w_igate": base.dense_init(next(ks), (w, w), dt),
+                "b_igate": jnp.zeros((w,), jnp.float32),
+                "lam": jnp.full((w,), -1.0, jnp.float32),   # softplus'd
+                "w_out": base.dense_init(next(ks), (w, d), dt),
+            })
+        else:                                       # local attention
+            l.update({
+                "wq": base.dense_init(next(ks), (d, cfg.q_dim), dt),
+                "wk": base.dense_init(next(ks), (d, cfg.kv_dim), dt),
+                "wv": base.dense_init(next(ks), (d, cfg.kv_dim), dt),
+                "wo": base.dense_init(next(ks), (cfg.q_dim, d), dt),
+            })
+        # MLP after every mixer
+        l.update({
+            "w_gate": base.dense_init(next(ks), (d, cfg.d_ff), dt),
+            "w_up": base.dense_init(next(ks), (d, cfg.d_ff), dt),
+            "w_down": base.dense_init(next(ks), (cfg.d_ff, d), dt),
+        })
+        layers.append(l)
+    return {
+        "embed": base.dense_init(next(ks), (cfg.vocab_size, d), dt),
+        "final_norm": jnp.zeros((d,), dt),
+        "layers": layers,                            # heterogeneous: a list
+        "unembed": base.dense_init(next(ks), (d, cfg.vocab_size), dt),
+    }
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    kinds = layer_kinds(cfg)
+    layers = []
+    for kind in kinds:
+        l = {"ln1": ("embed",), "ln2": ("embed",)}
+        if kind == "rglru":
+            l.update({
+                "w_gelu": ("embed", "inner"), "w_rec": ("embed", "inner"),
+                "conv_w": (None, "inner"), "conv_b": ("inner",),
+                "w_rgate": ("inner_in", "inner"), "b_rgate": ("inner",),
+                "w_igate": ("inner_in", "inner"), "b_igate": ("inner",),
+                "lam": ("inner",), "w_out": ("inner", "embed"),
+            })
+        else:
+            l.update({"wq": ("embed", "q_out"), "wk": ("embed", "kv_out"),
+                      "wv": ("embed", "kv_out"), "wo": ("q_out", "embed")})
+        l.update({"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                  "w_down": ("ff", "embed")})
+        layers.append(l)
+    return {"embed": ("vocab", "embed"), "final_norm": ("embed",),
+            "layers": layers, "unembed": ("embed", "vocab")}
+
+
+LRU_CHUNK = 256
+
+
+def _rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t * h_{t-1} + b_t.  Chunked: sequential lax.scan over chunks
+    of LRU_CHUNK with an associative scan inside each chunk — bounds the
+    O(S log S) temporaries of a full-sequence associative scan (which blew
+    per-device training memory at 4k x 4096-wide states).  On real TPU the
+    inner loop becomes a Pallas linear-scan kernel (Griffin's approach)."""
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    bsz, s, w = a.shape
+    q = min(LRU_CHUNK, s)
+    if s % q:
+        # ragged tail: fall back to the direct associative scan
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        _, bv = jax.lax.associative_scan(op, (a, b), axis=1)
+        return bv, bv[:, -1]
+    nc = s // q
+    ac = a.reshape(bsz, nc, q, w).transpose(1, 0, 2, 3)
+    bc = b.reshape(bsz, nc, q, w).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, inp):
+        a_i, b_i = inp                               # (B, Q, W)
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h)
+        _, states = jax.lax.associative_scan(op, (a_i, b_i), axis=1)
+        return states[:, -1], states
+
+    h_last, states = jax.lax.scan(chunk_body, h0, (ac, bc))
+    return states.transpose(1, 0, 2, 3).reshape(bsz, s, w), h_last
+
+
+def _rglru_block(p_l, x, cfg, cache_l, mode):
+    """Recurrent mixer.  cache_l: {"conv": (B,3,W), "h": (B,W)}."""
+    w = _lru_width(cfg)
+    gelu_branch = jax.nn.gelu(x @ p_l["w_gelu"])
+    y = x @ p_l["w_rec"]
+    conv_state = cache_l["conv"] if cache_l is not None else None
+    # linear causal conv (no activation)
+    k = p_l["conv_w"].shape[0]
+    pad = conv_state if conv_state is not None else \
+        jnp.zeros(y.shape[:1] + (k - 1,) + y.shape[2:], y.dtype)
+    yp = jnp.concatenate([pad, y], axis=1)
+    y = sum(yp[:, i:i + x.shape[1]] * p_l["conv_w"][i] for i in range(k)) \
+        + p_l["conv_b"]
+    new_conv = yp[:, -(k - 1):]
+
+    r = jax.nn.sigmoid((y @ p_l["w_rgate"]).astype(jnp.float32) + p_l["b_rgate"])
+    i = jax.nn.sigmoid((y @ p_l["w_igate"]).astype(jnp.float32) + p_l["b_igate"])
+    log_a = -LRU_C * jax.nn.softplus(p_l["lam"]) * r      # (B,S,W), <0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * y.astype(jnp.float32))
+    h0 = cache_l["h"].astype(jnp.float32) if cache_l is not None else \
+        jnp.zeros((x.shape[0], w), jnp.float32)
+    if mode == "decode":
+        h = a[:, 0] * h0 + gated[:, 0]
+        states, h_last = h[:, None], h
+    else:
+        states, h_last = _rglru_scan(a, gated, h0)
+    out = (states.astype(x.dtype) * gelu_branch) @ p_l["w_out"]
+    new_cache = None
+    if cache_l is not None:
+        new_cache = {"conv": new_conv.astype(cache_l["conv"].dtype),
+                     "h": h_last.astype(cache_l["h"].dtype)}
+    return out, new_cache
+
+
+def _layer(p_l, kind, x, cfg, *, positions, mode, cache_l, kv_len, lora_l,
+           adapter_ids, disagg, chunk_start=None):
+    h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    if kind == "rglru":
+        mix, new_cache = _rglru_block(p_l, h, cfg, cache_l, mode)
+        x = x + mix
+    else:
+        attn_out, new_cache = tfm.attention(
+            p_l, h, cfg, positions=positions, mode=mode, cache=cache_l,
+            kv_len=kv_len, lora=lora_l, adapter_ids=adapter_ids,
+            disagg=disagg, window=cfg.local_window,
+            chunk_start=chunk_start)
+        x = x + attn_out.reshape(x.shape[0], x.shape[1], -1) @ p_l["wo"]
+    h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    x = x + (jax.nn.silu(h @ p_l["w_gate"]) * (h @ p_l["w_up"])) @ p_l["w_down"]
+    return x, new_cache
+
+
+def _apply(params, x, cfg, *, positions, mode, cache, kv_len, lora,
+           adapter_ids, disagg, chunk_start=None):
+    kinds = layer_kinds(cfg)
+    new_caches = []
+    attn_idx = 0
+    for li, (p_l, kind) in enumerate(zip(params["layers"], kinds)):
+        c_l = cache[li] if cache is not None else None
+        l_l = None
+        if lora is not None and kind == "local":
+            l_l = jax.tree_util.tree_map(lambda t: t[attn_idx], lora)
+        if kind == "local":
+            attn_idx += 1
+        def run(x_, p_, c_, l_, pos_, kvl_, ids_, _kind=kind):
+            return _layer(p_, _kind, x_, cfg, positions=pos_, mode=mode,
+                          cache_l=c_, kv_len=kvl_, lora_l=l_,
+                          adapter_ids=ids_, disagg=disagg,
+                          chunk_start=chunk_start)
+
+        fn = jax.checkpoint(run) if (cfg.remat and mode == "full") else run
+        x, nc = fn(x, p_l, c_l, l_l, positions, kv_len, adapter_ids)
+        new_caches.append(nc)
+    return x, (new_caches if cache is not None else None)
+
+
+def num_attention_layers(cfg: ModelConfig) -> int:
+    return sum(1 for k in layer_kinds(cfg) if k == "local")
+
+
+def init_lora_stacks(cfg: ModelConfig, key, n_adapters: int,
+                     nonzero: bool = True) -> Params:
+    """LoRA stacks for the attention layers only (leading dim = #attn layers)."""
+    import dataclasses
+    sub = dataclasses.replace(cfg, num_layers=num_attention_layers(cfg))
+    return tfm.init_lora_stacks(sub, key, n_adapters, nonzero)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, lora=None, adapter_ids=None,
+            disagg=False, extra_embeds=None) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (bsz, s))
+    x, _ = _apply(params, x, cfg, positions=positions, mode="full",
+                  cache=None, kv_len=None, lora=lora,
+                  adapter_ids=adapter_ids, disagg=disagg)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               disagg: bool = False, dtype=None) -> list:
+    dt = dtype or cfg.activation_dtype
+    w = _lru_width(cfg)
+    hd = cfg.resolved_head_dim
+    smax = min(max_len, cfg.local_window) if cfg.local_window else max_len
+    caches = []
+    for kind in layer_kinds(cfg):
+        if kind == "rglru":
+            caches.append({"conv": jnp.zeros((batch, 3, w), dt),
+                           "h": jnp.zeros((batch, w), jnp.float32)})
+        else:
+            c = {"k": jnp.zeros((batch, smax, cfg.num_kv_heads, hd), dt),
+                 "v": jnp.zeros((batch, smax, cfg.num_kv_heads, hd), dt)}
+            if disagg:
+                c["k_res"] = jnp.zeros((batch, smax, cfg.lora.rank), dt)
+                c["v_res"] = jnp.zeros((batch, smax, cfg.lora.rank), dt)
+            caches.append(c)
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig, disagg: bool = False) -> list:
+    axes = []
+    for kind in layer_kinds(cfg):
+        if kind == "rglru":
+            axes.append({"conv": ("batch", None, "inner"),
+                         "h": ("batch", "inner")})
+        else:
+            c = {"k": ("batch", None, "kv_heads", "kv_head_dim"),
+                 "v": ("batch", None, "kv_heads", "kv_head_dim")}
+            if disagg:
+                c["k_res"] = ("batch", None, "rank")
+                c["v_res"] = ("batch", None, "rank")
+            axes.append(c)
+    return axes
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, start: int = 0,
+            lora=None, adapter_ids=None, disagg=False, extra_embeds=None):
+    x = params["embed"][tokens]
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(start, start + s), (bsz, s))
+    x, cache = _apply(params, x, cfg, positions=positions, mode="prefill",
+                      cache=cache, kv_len=None, lora=lora,
+                      adapter_ids=adapter_ids, disagg=disagg,
+                      chunk_start=start)
+    x = base.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"], cache
+
+
+def decode_step(params, tokens, cache, kv_len, cfg: ModelConfig, *,
+                lora=None, adapter_ids=None, disagg=False):
+    x = params["embed"][tokens][:, None]
+    x, cache = _apply(params, x, cfg, positions=kv_len, mode="decode",
+                      cache=cache, kv_len=kv_len, lora=lora,
+                      adapter_ids=adapter_ids, disagg=disagg)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x @ params["unembed"])[:, 0], cache

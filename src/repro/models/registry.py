@@ -1,0 +1,108 @@
+"""Uniform model API over the six architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelApi` with
+init_params / logical_axes / forward / init_cache / prefill / decode_step /
+init_lora_stacks, dispatched on ``cfg.family``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.core.config import ModelConfig
+from repro.models import encdec, hybrid, ssm
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    logical_axes: Callable
+    forward: Callable
+    init_cache: Callable
+    cache_logical_axes: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_lora_stacks: Optional[Callable]
+    lora_logical_axes: Optional[Callable]
+    supports_forkkv: bool      # does the family have a LoRA'd KV cache?
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = tfm
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: mod.init_params(cfg, key),
+            logical_axes=lambda: mod.logical_axes(cfg),
+            forward=lambda params, tokens, **kw: mod.forward(
+                params, tokens, cfg, **kw),
+            init_cache=lambda batch, max_len, **kw: mod.init_cache(
+                cfg, batch, max_len, **kw),
+            cache_logical_axes=lambda **kw: mod.cache_logical_axes(cfg, **kw),
+            prefill=lambda params, tokens, cache, **kw: mod.prefill(
+                params, tokens, cache, cfg, **kw),
+            decode_step=lambda params, tokens, cache, kv_len, **kw:
+                mod.decode_step(params, tokens, cache, kv_len, cfg, **kw),
+            init_lora_stacks=lambda key, n, **kw: mod.init_lora_stacks(
+                cfg, key, n, **kw),
+            lora_logical_axes=lambda: mod.lora_logical_axes(),
+            supports_forkkv=True)
+    if fam == "ssm":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: ssm.init_params(cfg, key),
+            logical_axes=lambda: ssm.logical_axes(cfg),
+            forward=lambda params, tokens, **kw: ssm.forward(
+                params, tokens, cfg, **kw),
+            init_cache=lambda batch, max_len, **kw: ssm.init_cache(
+                cfg, batch, max_len, **kw),
+            cache_logical_axes=lambda **kw: ssm.cache_logical_axes(cfg, **kw),
+            prefill=lambda params, tokens, cache, **kw: ssm.prefill(
+                params, tokens, cache, cfg, **kw),
+            decode_step=lambda params, tokens, cache, kv_len, **kw:
+                ssm.decode_step(params, tokens, cache, kv_len, cfg, **kw),
+            init_lora_stacks=None,
+            lora_logical_axes=None,
+            supports_forkkv=False)    # attention-free: ForkKV N/A
+    if fam == "hybrid":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: hybrid.init_params(cfg, key),
+            logical_axes=lambda: hybrid.logical_axes(cfg),
+            forward=lambda params, tokens, **kw: hybrid.forward(
+                params, tokens, cfg, **kw),
+            init_cache=lambda batch, max_len, **kw: hybrid.init_cache(
+                cfg, batch, max_len, **kw),
+            cache_logical_axes=lambda **kw: hybrid.cache_logical_axes(
+                cfg, **kw),
+            prefill=lambda params, tokens, cache, **kw: hybrid.prefill(
+                params, tokens, cache, cfg, **kw),
+            decode_step=lambda params, tokens, cache, kv_len, **kw:
+                hybrid.decode_step(params, tokens, cache, kv_len, cfg, **kw),
+            init_lora_stacks=lambda key, n, **kw: hybrid.init_lora_stacks(
+                cfg, key, n, **kw),
+            lora_logical_axes=lambda: tfm.lora_logical_axes(),
+            supports_forkkv=True)     # on the local-attention layers
+    if fam == "audio":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(cfg, key),
+            logical_axes=lambda: encdec.logical_axes(cfg),
+            forward=lambda params, tokens, **kw: encdec.forward(
+                params, tokens, cfg, **kw),
+            init_cache=lambda batch, max_len, **kw: encdec.init_cache(
+                cfg, batch, max_len, **kw),
+            cache_logical_axes=lambda **kw: encdec.cache_logical_axes(
+                cfg, **kw),
+            prefill=lambda params, tokens, cache, **kw: encdec.prefill(
+                params, tokens, cache, cfg, **kw),
+            decode_step=lambda params, tokens, cache, kv_len, **kw:
+                encdec.decode_step(params, tokens, cache, kv_len, cfg, **kw),
+            init_lora_stacks=lambda key, n, **kw: tfm.init_lora_stacks(
+                cfg, key, n, **kw),
+            lora_logical_axes=lambda: tfm.lora_logical_axes(),
+            supports_forkkv=True)     # decoder self-attention
+    raise ValueError(f"unknown family {fam!r}")

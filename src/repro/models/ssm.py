@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality) blocks. [arXiv:2405.21060]
+
+Attention-free: no KV cache exists, so ForkKV's disaggregation is N/A for
+this family (DESIGN.md §5); it is served with its native bounded state cache
+(conv window + SSM state).  Implements the chunked SSD algorithm for
+train/prefill and the O(1) recurrent update for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import base
+
+Params = Dict[str, Any]
+
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or max(1, d_inner // 64)
+    head_p = d_inner // heads
+    n = cfg.ssm_state
+    return d_inner, heads, head_p, n
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = cfg.activation_dtype
+    d, L = cfg.d_model, cfg.num_layers
+    d_inner, heads, head_p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n                      # x, B, C all convolved
+    ks = base.split_keys(key, 8)
+    in_dim = 2 * d_inner + 2 * n + heads            # z, x, B, C, dt
+    layers = {
+        "ln": jnp.zeros((L, d), dt),
+        "w_in": base.dense_init(ks[0], (L, d, in_dim), dt),
+        "conv_w": base.dense_init(ks[1], (L, cfg.ssm_conv, conv_dim), dt, 0.2),
+        "conv_b": jnp.zeros((L, conv_dim), dt),
+        "a_log": jnp.zeros((L, heads), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((L, heads), jnp.float32),
+        "dt_bias": jnp.zeros((L, heads), jnp.float32),
+        "gate_ln": jnp.zeros((L, d_inner), dt),
+        "w_out": base.dense_init(ks[2], (L, d_inner, d), dt),
+    }
+    return {
+        "embed": base.dense_init(ks[3], (cfg.vocab_size, d), dt),
+        "final_norm": jnp.zeros((d,), dt),
+        "layers": layers,
+        "unembed": base.dense_init(ks[4], (d, cfg.vocab_size), dt),
+    }
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    return {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "unembed": ("embed", "vocab"),
+        "layers": {
+            "ln": ("layers", "embed"),
+            "w_in": ("layers", "embed", "inner"),
+            "conv_w": ("layers", None, "inner"),
+            "conv_b": ("layers", "inner"),
+            "a_log": ("layers", None),
+            "d_skip": ("layers", None),
+            "dt_bias": ("layers", None),
+            "gate_ln": ("layers", "inner"),
+            "w_out": ("layers", "inner", "embed"),
+        },
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, heads, head_p, n = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C).  state: (B,K-1,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)   # conv state is stored f32
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def _ssd_chunked(x, dt, a, bm, cm, d_skip, h0):
+    """Chunked SSD scan.
+
+    x:  (B,S,H,P)  values
+    dt: (B,S,H)    discretization (softplus'd, >0)
+    a:  (H,)       negative decay rates
+    bm/cm: (B,S,N) input/output projections (single group)
+    h0: (B,H,P,N) initial state
+    Returns (y (B,S,H,P), h_final).
+    """
+    bsz, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(CHUNK, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = bm.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = cm.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    la = dtc * a                                     # (B,nc,Q,H) log-decays
+    cs = jnp.cumsum(la, axis=2)                      # within-chunk cumsum
+    # intra-chunk (quadratic, attention-like)
+    li = cs[:, :, :, None, :]                        # i
+    lj = cs[:, :, None, :, :]                        # j
+    decay = jnp.exp(li - lj)                         # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)[..., None] * decay
+    scores = jnp.where(causal[None, None, :, :, None], scores, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # chunk states: contribution of each chunk to the running state
+    tail = jnp.exp(cs[:, :, -1:, :] - cs)            # decay to chunk end
+    state_c = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchpn", tail, dtc, bc, xc)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(jnp.sum(la, axis=2))       # (B,nc,H)
+
+    def step(hprev, inp):
+        dec, st = inp                                # (B,H), (B,H,P,N)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev                           # emit state entering chunk
+
+    h_last, h_in = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), state_c.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, h_in, jnp.exp(cs))
+    y = y_intra + y_inter + d_skip[None, None, None, :, None] * xc.reshape(
+        bsz, nc, q, h, p)
+    y = y.reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), h_last
+
+
+def _layer(p_l, x, cfg, cache_l, mode):
+    """One mamba2 block.  cache_l: {"conv": (B,K-1,C), "ssm": (B,H,P,N)}."""
+    d_inner, heads, head_p, n = _dims(cfg)
+    h = base.rms_norm(x, p_l["ln"], cfg.norm_eps)
+    proj = h @ p_l["w_in"]
+    z, xin, bm, cm, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xin, bm, cm], axis=-1)
+    conv_state = cache_l["conv"] if cache_l is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p_l["conv_w"], p_l["conv_b"],
+                                      conv_state)
+    xin, bm, cm = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p_l["dt_bias"][None, None, :])
+    a = -jnp.exp(p_l["a_log"])                      # (H,)
+    xv = xin.reshape(xin.shape[:2] + (heads, head_p))
+
+    h0 = cache_l["ssm"].astype(jnp.float32) if cache_l is not None else \
+        jnp.zeros((x.shape[0], heads, head_p, n), jnp.float32)
+
+    if mode == "decode":                            # S == 1: O(1) update
+        dt1 = dt[:, 0]                              # (B,H)
+        dec = jnp.exp(dt1 * a[None, :])             # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, bm[:, 0].astype(jnp.float32),
+                         xv[:, 0].astype(jnp.float32))
+        h_new = h0 * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), h_new)
+        y = y + p_l["d_skip"][None, :, None] * xv[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)              # (B,1,H,P)
+    else:
+        y, h_new = _ssd_chunked(xv, dt, a, bm, cm, p_l["d_skip"], h0)
+
+    y = y.reshape(y.shape[:2] + (d_inner,))
+    y = base.rms_norm(y * jax.nn.silu(z), p_l["gate_ln"], cfg.norm_eps)
+    out = x + y @ p_l["w_out"]
+    new_cache = None
+    if cache_l is not None:
+        new_cache = {"conv": new_conv.astype(cache_l["conv"].dtype),
+                     "ssm": h_new.astype(cache_l["ssm"].dtype)}
+    return out, new_cache
+
+
+def _apply(params, x, cfg, cache, mode):
+    lp = params["layers"]
+
+    def body(carry, xs):
+        p_l, c_l = xs
+        out, nc = _layer(p_l, carry, cfg,
+                         c_l if cache is not None else None, mode)
+        return out, (nc if nc is not None else jnp.zeros((), x.dtype))
+
+    dummy = cache if cache is not None else jnp.zeros((cfg.num_layers,), x.dtype)
+    fn = jax.checkpoint(body) if (cfg.remat and mode == "full") else body
+    x, new_cache = jax.lax.scan(fn, x, (lp, dummy))
+    return x, (new_cache if cache is not None else None)
+
+
+def forward(params, tokens, cfg: ModelConfig, **_) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    x, _ = _apply(params, x, cfg, None, "full")
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, disagg=False,
+               dtype=None) -> Params:
+    dt = jnp.float32                                 # states kept in f32
+    d_inner, heads, head_p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    L = cfg.num_layers
+    return {"conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
+            "ssm": jnp.zeros((L, batch, heads, head_p, n), dt)}
+
+
+def cache_logical_axes(cfg: ModelConfig, disagg=False) -> Params:
+    return {"conv": ("layers", "batch", None, "inner"),
+            "ssm": ("layers", "batch", None, "inner_head", "state")}
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, start=0,
+            lora=None, adapter_ids=None, disagg=False, extra_embeds=None):
+    x = params["embed"][tokens]
+    x, cache = _apply(params, x, cfg, cache, "prefill")
+    x = base.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"], cache
+
+
+def decode_step(params, tokens, cache, kv_len, cfg: ModelConfig, *,
+                lora=None, adapter_ids=None, disagg=False):
+    x = params["embed"][tokens][:, None]
+    x, cache = _apply(params, x, cfg, cache, "decode")
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x @ params["unembed"])[:, 0], cache

@@ -1,0 +1,793 @@
+"""Llama-family transformer: dense, MoE and VLM-backbone variants.
+
+Covers llama3-405b, internlm2, starcoder2, h2o-danube (SWA), the mistral
+backbone of llava-next, dbrx / llama4 (MoE), and the paper's own models
+(llama3-8b, qwen2.5).  Single implementation, configured by
+:class:`repro.core.config.ModelConfig`.
+
+Three execution modes:
+  * ``forward``      — full causal pass (training / teacher-forcing)
+  * ``prefill``      — populate a KV cache (unified or disaggregated)
+  * ``decode``       — one token per request against the cache
+
+Multi-LoRA is first-class: all adapters live in stacked arrays and each batch
+row selects its adapter (``adapter_ids``), the TPU analogue of Punica BGMV.
+The disaggregated path stores rank-r residuals (rCache) next to the shared
+base cache (bCache) and computes attention via ResidualAttention
+(:mod:`repro.kernels.ops`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as attn_lib
+from repro.core import rope as rope_lib
+from repro.core.config import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.models import base
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Parameter init / logical axes
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = cfg.activation_dtype
+    d, L = cfg.d_model, cfg.num_layers
+    ks = base.split_keys(key, 16)
+    layers: Params = {
+        "ln1": jnp.zeros((L, d), dt),
+        "ln2": jnp.zeros((L, d), dt),
+        "wq": base.dense_init(ks[0], (L, d, cfg.q_dim), dt),
+        "wk": base.dense_init(ks[1], (L, d, cfg.kv_dim), dt),
+        "wv": base.dense_init(ks[2], (L, d, cfg.kv_dim), dt),
+        "wo": base.dense_init(ks[3], (L, cfg.q_dim, d), dt),
+    }
+    if cfg.num_experts:
+        ffe = cfg.moe_d_ff or cfg.d_ff
+        L_moe = L // cfg.moe_interleave
+        layers.update({
+            "router": base.dense_init(ks[4], (L_moe, d, cfg.num_experts), dt),
+            "w_gate_e": base.dense_init(
+                ks[5], (L_moe, cfg.num_experts, d, ffe), dt),
+            "w_up_e": base.dense_init(
+                ks[6], (L_moe, cfg.num_experts, d, ffe), dt),
+            "w_down_e": base.dense_init(
+                ks[7], (L_moe, cfg.num_experts, ffe, d), dt),
+        })
+        if cfg.moe_shared_expert:
+            layers["w_gate_s"] = base.dense_init(ks[10], (L_moe, d, ffe), dt)
+            layers["w_up_s"] = base.dense_init(ks[11], (L_moe, d, ffe), dt)
+            layers["w_down_s"] = base.dense_init(ks[12], (L_moe, ffe, d), dt)
+        if cfg.moe_interleave > 1:          # interleaved dense MLP layers
+            L_dense = L - L_moe
+            layers["w_gate"] = base.dense_init(ks[13], (L_dense, d, cfg.d_ff), dt)
+            layers["w_up"] = base.dense_init(ks[14], (L_dense, d, cfg.d_ff), dt)
+            layers["w_down"] = base.dense_init(ks[15], (L_dense, cfg.d_ff, d), dt)
+    else:
+        if cfg.mlp_activation == "silu":
+            layers["w_gate"] = base.dense_init(ks[4], (L, d, cfg.d_ff), dt)
+        layers["w_up"] = base.dense_init(ks[5], (L, d, cfg.d_ff), dt)
+        layers["w_down"] = base.dense_init(ks[6], (L, cfg.d_ff, d), dt)
+    params: Params = {
+        "embed": base.dense_init(ks[8], (cfg.vocab_size, d), dt),
+        "final_norm": jnp.zeros((d,), dt),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = base.dense_init(ks[9], (d, cfg.vocab_size), dt)
+    if cfg.frontend == "vision_stub":
+        # projector from (stubbed) vision features to d_model
+        params["mm_projector"] = base.dense_init(ks[10], (d, d), dt)
+    return params
+
+
+def logical_axes(cfg: ModelConfig) -> Params:
+    layers = {
+        "ln1": ("layers", "embed"),
+        "ln2": ("layers", "embed"),
+        "wq": ("layers", "embed", "q_out"),
+        "wk": ("layers", "embed", "kv_out"),
+        "wv": ("layers", "embed", "kv_out"),
+        "wo": ("layers", "q_out", "embed"),
+    }
+    if cfg.num_experts:
+        layers.update({
+            "router": ("layers", "embed", None),
+            "w_gate_e": ("layers", "expert_w", "embed", "ff"),
+            "w_up_e": ("layers", "expert_w", "embed", "ff"),
+            "w_down_e": ("layers", "expert_w", "ff", "embed"),
+        })
+        if cfg.moe_shared_expert:
+            layers["w_gate_s"] = ("layers", "embed", "ff")
+            layers["w_up_s"] = ("layers", "embed", "ff")
+            layers["w_down_s"] = ("layers", "ff", "embed")
+        if cfg.moe_interleave > 1:
+            layers["w_gate"] = ("layers", "embed", "ff")
+            layers["w_up"] = ("layers", "embed", "ff")
+            layers["w_down"] = ("layers", "ff", "embed")
+    else:
+        if cfg.mlp_activation == "silu":
+            layers["w_gate"] = ("layers", "embed", "ff")
+        layers["w_up"] = ("layers", "embed", "ff")
+        layers["w_down"] = ("layers", "ff", "embed")
+    axes = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("embed", "vocab")
+    if cfg.frontend == "vision_stub":
+        axes["mm_projector"] = ("embed", "embed")
+    return axes
+
+
+def init_lora_stacks(cfg: ModelConfig, key: jax.Array, n_adapters: int,
+                     nonzero: bool = True) -> Params:
+    """Stacked LoRA adapters for q/k/v over all layers: BGMV layout."""
+    dt = cfg.activation_dtype
+    d, L, r = cfg.d_model, cfg.num_layers, cfg.lora.rank
+    ks = base.split_keys(key, 6)
+    scale_b = 0.05 if nonzero else 0.0
+
+    def mk(k1, k2, d_out):
+        a = jax.random.normal(k1, (L, n_adapters, d, r), jnp.float32) / jnp.sqrt(d)
+        b = jax.random.normal(k2, (L, n_adapters, r, d_out), jnp.float32)
+        b = b * scale_b / jnp.sqrt(r)
+        return a.astype(dt), b.astype(dt)
+
+    a_q, b_q = mk(ks[0], ks[1], cfg.q_dim)
+    a_k, b_k = mk(ks[2], ks[3], cfg.kv_dim)
+    a_v, b_v = mk(ks[4], ks[5], cfg.kv_dim)
+    return {"a_q": a_q, "b_q": b_q, "a_k": a_k, "b_k": b_k,
+            "a_v": a_v, "b_v": b_v,
+            # per-layer copy so every leaf carries the leading L (scan) dim
+            "scaling": jnp.full((L, n_adapters), cfg.lora.scaling,
+                                jnp.float32)}
+
+
+def lora_logical_axes() -> Params:
+    return {"a_q": ("layers", None, "embed", "rank"),
+            "b_q": ("layers", None, "rank", "q_out"),
+            "a_k": ("layers", None, "embed", "rank"),
+            "b_k": ("layers", None, "rank", "kv_out"),
+            "a_v": ("layers", None, "embed", "rank"),
+            "b_v": ("layers", None, "rank", "kv_out"),
+            "scaling": ("layers", None)}
+
+
+# --------------------------------------------------------------------------
+# KV-cache int8 quantization (beyond-paper, see EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+def quantize_kv(x):
+    """Per-(position, head) symmetric int8.  x: (..., Hkv, hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+def _bgmv(x, a_l, b_l, scaling, adapter_ids):
+    """Per-row LoRA offset: x (B,S,d) -> (B,S,d_out); a_l (N,d,r), b_l (N,r,o)."""
+    a = a_l[adapter_ids]                      # (B, d, r)
+    b = b_l[adapter_ids]                      # (B, r, o)
+    s = scaling[adapter_ids].astype(x.dtype)  # (B,)
+    r = jnp.einsum("bsd,bdr->bsr", x, a.astype(x.dtype))
+    return jnp.einsum("bsr,bro->bso", r, b.astype(x.dtype)) * s[:, None, None]
+
+
+def _bgmv_down(x, a_l, scaling, adapter_ids):
+    a = a_l[adapter_ids]
+    s = scaling[adapter_ids].astype(x.dtype)
+    return jnp.einsum("bsd,bdr->bsr", x, a.astype(x.dtype)) * s[:, None, None]
+
+
+def mlp(p_l, x, cfg: ModelConfig):
+    if cfg.mlp_activation == "silu":
+        h = jax.nn.silu(x @ p_l["w_gate"]) * (x @ p_l["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p_l["w_up"])
+    return h @ p_l["w_down"]
+
+
+def moe_ffn(p_l, x, cfg: ModelConfig, capacity_factor: float = 0.0):
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    """Scatter-based capacity MoE (tensor-parallel friendly, see DESIGN.md).
+
+    Expert weights are sharded along the ff dim; tokens are dispatched to an
+    (E, C, d) buffer with a capacity of ``k*t/E * cf`` and gathered back.
+    FLOP overcount vs. perfectly-dropless is bounded by cf.
+    """
+    bsz, s, d = x.shape
+    t = bsz * s
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(t, d)
+    logits = (xf @ p_l["router"]).astype(jnp.float32)        # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (t, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(8, ((t * k / E) * capacity_factor + 7) // 8 * 8))
+    flat_e = idx.reshape(-1)                                  # (t*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    valid = pos < cap
+    dest = jnp.where(valid, flat_e * cap + pos, E * cap)      # overflow slot
+    token_of = jnp.arange(t * k) // k
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[dest].set(xf[token_of])
+    h = buf[:-1].reshape(E, cap, d)
+    a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p_l["w_gate_e"]))
+    a = a * jnp.einsum("ecd,edf->ecf", h, p_l["w_up_e"])
+    o = jnp.einsum("ecf,efd->ecd", a, p_l["w_down_e"])
+    o_flat = jnp.concatenate([o.reshape(E * cap, d),
+                              jnp.zeros((1, d), x.dtype)], axis=0)
+    y = o_flat[dest] * (gates.reshape(-1) * valid).astype(x.dtype)[:, None]
+    y = y.reshape(t, k, d).sum(axis=1)
+    # load-balance aux loss (returned via closure-free side channel not
+    # needed for serving; training uses aux from `moe_aux_loss`)
+    y = y.reshape(bsz, s, d)
+    if "w_gate_s" in p_l:   # shared (always-on) expert, llama4-style
+        y = y + (jax.nn.silu(x @ p_l["w_gate_s"]) *
+                 (x @ p_l["w_up_s"])) @ p_l["w_down_s"]
+    return y
+
+
+def moe_aux_loss(p_l, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Switch-style load-balance loss for one layer."""
+    bsz, s, d = x.shape
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax((xf @ p_l["router"]).astype(jnp.float32), -1)
+    _, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def ffn(p_l, x, cfg: ModelConfig):
+    # dispatch on the params present so interleaved MoE (dense sublayers
+    # between MoE sublayers, llama4-style) works inside one scan body
+    return moe_ffn(p_l, x, cfg) if "router" in p_l else mlp(p_l, x, cfg)
+
+
+# --------------------------------------------------------------------------
+# Attention with unified / disaggregated caches
+# --------------------------------------------------------------------------
+def _qkv(p_l, x, cfg, lora, adapter_ids, positions):
+    """Project q (RoPE'd, with LoRA) and raw k/v base projections."""
+    bsz, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p_l["wq"]
+    if lora is not None:
+        q = q + _bgmv(x, lora["a_q"], lora["b_q"], lora["scaling"], adapter_ids)
+    q = q.reshape(bsz, s, cfg.num_heads, hd)
+    if cfg.use_rope:
+        sin, cos = rope_lib.rope_sincos(positions, hd, cfg.rope_theta)
+        q = rope_lib.apply_rope(q, sin.astype(x.dtype), cos.astype(x.dtype))
+    else:
+        # identity rotation so the deferred-RoPE reconstruction is a no-op
+        sin = jnp.zeros(positions.shape + (hd // 2,), jnp.float32)
+        cos = jnp.ones(positions.shape + (hd // 2,), jnp.float32)
+    return q, sin.astype(x.dtype), cos.astype(x.dtype)
+
+
+_EMPTY_POS = 1 << 30
+
+
+def _ring_kpos(kv_len: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Absolute positions held by each slot of a ring buffer. (B, W).
+
+    Slot s holds the largest position p < n with p ≡ s (mod W); empty slots
+    (p < 0, i.e. cache not yet wrapped) get a sentinel that fails every
+    causal mask.
+    """
+    slots = jnp.arange(window)[None, :]
+    n = kv_len[:, None]
+    p = (n - 1) - (n - 1 - slots) % window
+    return jnp.where(p >= 0, p, _EMPTY_POS)
+
+
+def attention(p_l, x, cfg: ModelConfig, *, positions, mode: str,
+              cache=None, kv_len=None, lora=None, adapter_ids=None,
+              disagg: bool = False, window: int = 0,
+              chunk_start=None):
+    """One attention layer.  Returns (out, new_cache).
+
+    mode: "full"    — no cache, causal over x (training)
+          "prefill" — write cache for positions, causal (+ q_offset)
+          "decode"  — x is (B, 1, d), read/update cache at kv_len
+    cache: dict with "k","v" [, "k_res","v_res"] (layer slice, no L dim)
+    """
+    bsz, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    if positions.ndim == 1:
+        positions = positions[:, None]            # decode: (B,) -> (B, 1)
+    q, sin, cos = _qkv(p_l, x, cfg, lora, adapter_ids, positions)
+
+    k_base = (x @ p_l["wk"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    v_base = (x @ p_l["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    if cfg.use_rope:
+        k_base = rope_lib.apply_rope(k_base, sin, cos)
+
+    if disagg and lora is not None:
+        k_res = _bgmv_down(x, lora["a_k"], lora["scaling"], adapter_ids)
+        v_res = _bgmv_down(x, lora["a_v"], lora["scaling"], adapter_ids)
+        bk_rows = lora["b_k"][adapter_ids].reshape(bsz, cfg.lora.rank, -1)
+        bv_rows = lora["b_v"][adapter_ids].reshape(bsz, cfg.lora.rank, -1)
+    else:
+        if lora is not None:   # unified: fold LoRA into cached K/V exactly
+            k_off = _bgmv(x, lora["a_k"], lora["b_k"], lora["scaling"],
+                          adapter_ids).reshape(bsz, s, cfg.num_kv_heads, hd)
+            v_off = _bgmv(x, lora["a_v"], lora["b_v"], lora["scaling"],
+                          adapter_ids).reshape(bsz, s, cfg.num_kv_heads, hd)
+            if cfg.use_rope:
+                k_off = rope_lib.apply_rope(k_off, sin, cos)
+            k_base = k_base + k_off
+            v_base = v_base + v_off
+        k_res = v_res = bk_rows = bv_rows = None
+
+    if mode == "full":
+        if disagg and lora is not None:
+            if s >= attn_lib.FLASH_THRESHOLD:
+                if window > 0:
+                    out = attn_lib.banded_window_attention(
+                        q, k_base, v_base, window=window, scale=scale,
+                        k_res=k_res, v_res=v_res, b_k=bk_rows, b_v=bv_rows,
+                        rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+                else:
+                    out = attn_lib.flash_attention(
+                        q, k_base, v_base, qpos=positions, kpos=positions,
+                        window=window, causal=True, scale=scale, k_res=k_res,
+                        v_res=v_res, b_k=bk_rows, b_v=bv_rows,
+                        rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+            else:
+                # attention over reconstructed K/V: train/serve parity
+                out = kernel_ops.residual_attention(
+                    q, k_base, v_base, k_res, v_res, bk_rows, bv_rows, sin,
+                    cos, qpos=positions, kv_len=None, window=window,
+                    causal=True, scale=scale)
+        else:
+            out = attn_lib.mha(q, k_base, v_base, causal=True, window=window,
+                               scale=scale)
+        return out, None
+
+    assert cache is not None
+    smax = cache["k"].shape[1]
+    is_ring = window > 0 and smax == window
+
+    if mode == "prefill":
+        # write positions [kv_start, kv_start + s) ; assume batch-uniform
+        # start offset = positions[:, 0]
+        bidx = jnp.arange(bsz)[:, None]
+        new_cache = dict(cache)
+        if is_ring and s >= window:
+            # only the last `window` chunk tokens survive: write exactly one
+            # token per ring slot (duplicate scatter indices are UB)
+            slot = positions[:, -window:] % window
+            wr = lambda t: t[:, -window:]
+        else:
+            slot = (positions % window) if is_ring else positions
+            wr = lambda t: t
+        if cfg.kv_quant == "int8":
+            kq, ks_ = quantize_kv(k_base)
+            vq, vs_ = quantize_kv(v_base)
+            new_cache["k"] = cache["k"].at[bidx, slot].set(wr(kq))
+            new_cache["v"] = cache["v"].at[bidx, slot].set(wr(vq))
+            new_cache["k_scale"] = cache["k_scale"].at[bidx, slot].set(wr(ks_))
+            new_cache["v_scale"] = cache["v_scale"].at[bidx, slot].set(wr(vs_))
+        else:
+            new_cache["k"] = cache["k"].at[bidx, slot].set(wr(k_base))
+            new_cache["v"] = cache["v"].at[bidx, slot].set(wr(v_base))
+        if k_res is not None:
+            new_cache["k_res"] = cache["k_res"].at[bidx, slot].set(wr(k_res))
+            new_cache["v_res"] = cache["v_res"].at[bidx, slot].set(wr(v_res))
+        new_len = positions[:, -1] + 1
+        use_dis = disagg and lora is not None
+        if is_ring and chunk_start == 0 and s >= attn_lib.FLASH_THRESHOLD \
+                and s >= window:
+            # first chunk fills the whole ring: banded self-attention over
+            # the fresh chunk (no old cache to attend to) — §Perf pair B
+            out = attn_lib.banded_window_attention(
+                q, k_base, v_base, window=window, scale=scale,
+                k_res=k_res if use_dis else None,
+                v_res=v_res if use_dis else None,
+                b_k=bk_rows, b_v=bv_rows, rope_theta=cfg.rope_theta,
+                use_rope=cfg.use_rope)
+        elif is_ring:
+            # a chunk may overwrite ring slots its own earlier queries still
+            # need — attend over [old cache ‖ fresh chunk] instead
+            old_kpos = _ring_kpos(positions[:, 0], window)       # state@start
+            k_all = jnp.concatenate([cache["k"], k_base], axis=1)
+            v_all = jnp.concatenate([cache["v"], v_base], axis=1)
+            kpos_all = jnp.concatenate([old_kpos, positions], axis=1)
+            if use_dis:
+                kr_all = jnp.concatenate([cache["k_res"], k_res], axis=1)
+                vr_all = jnp.concatenate([cache["v_res"], v_res], axis=1)
+            else:
+                kr_all = vr_all = None
+            out = _attend(q, k_all, v_all, kr_all, vr_all, bk_rows, bv_rows,
+                          kpos_all, None, positions, window, scale, cfg,
+                          use_dis)
+        else:
+            # attention over the *updated* cache (covers chunked prefill)
+            out = _cached_attention(q, new_cache, positions, new_len, cfg,
+                                    bk_rows, bv_rows, window, is_ring, scale,
+                                    use_dis)
+        return out, new_cache
+
+    # decode: s == 1
+    pos = kv_len                                  # (B,) next position
+    slot = (pos % window) if is_ring else pos
+    bidx = jnp.arange(bsz)
+    new_cache = dict(cache)
+    if cfg.kv_quant == "int8":
+        kq, ks_ = quantize_kv(k_base[:, 0])
+        vq, vs_ = quantize_kv(v_base[:, 0])
+        new_cache["k"] = cache["k"].at[bidx, slot].set(kq)
+        new_cache["v"] = cache["v"].at[bidx, slot].set(vq)
+        new_cache["k_scale"] = cache["k_scale"].at[bidx, slot].set(ks_)
+        new_cache["v_scale"] = cache["v_scale"].at[bidx, slot].set(vs_)
+    else:
+        new_cache["k"] = cache["k"].at[bidx, slot].set(k_base[:, 0])
+        new_cache["v"] = cache["v"].at[bidx, slot].set(v_base[:, 0])
+    if k_res is not None:
+        new_cache["k_res"] = cache["k_res"].at[bidx, slot].set(k_res[:, 0])
+        new_cache["v_res"] = cache["v_res"].at[bidx, slot].set(v_res[:, 0])
+    out = _cached_attention(q, new_cache, positions, kv_len + 1,
+                            cfg, bk_rows, bv_rows, window, is_ring, scale,
+                            disagg and lora is not None)
+    return out, new_cache
+
+
+def _cached_attention(q, cache, qpos, kv_len, cfg, bk_rows, bv_rows,
+                      window, is_ring, scale, use_disagg):
+    """Attention of q against a (possibly ring) cache."""
+    k, v = cache["k"], cache["v"]
+    if cfg.kv_quant == "int8":
+        # dequantize on the fly; XLA fuses the convert+scale into the
+        # attention matmul's operand, so HBM traffic stays int8
+        k = dequantize_kv(k, cache["k_scale"], q.dtype)
+        v = dequantize_kv(v, cache["v_scale"], q.dtype)
+    bsz, smax = k.shape[0], k.shape[1]
+    if is_ring:
+        kmask_pos = _ring_kpos(kv_len, smax)      # (B, W) absolute positions
+        valid_len = None
+    else:
+        kmask_pos = jnp.broadcast_to(jnp.arange(smax)[None], (bsz, smax))
+        valid_len = kv_len
+    return _attend(q, k, v, cache.get("k_res"), cache.get("v_res"),
+                   bk_rows, bv_rows, kmask_pos, valid_len, qpos, window,
+                   scale, cfg, use_disagg)
+
+
+def _attend(q, k, v, k_res, v_res, bk_rows, bv_rows, kmask_pos, valid_len,
+            qpos, window, scale, cfg, use_disagg):
+    hd = cfg.resolved_head_dim
+    if valid_len is not None:
+        in_range = jnp.arange(k.shape[1])[None] < valid_len[:, None]
+        kmask_pos_f = jnp.where(in_range, kmask_pos, _EMPTY_POS)
+    else:
+        kmask_pos_f = kmask_pos
+    if q.shape[1] >= attn_lib.FLASH_THRESHOLD and \
+            k.shape[1] >= attn_lib.FLASH_THRESHOLD:
+        return attn_lib.flash_attention(
+            q, k, v, qpos=qpos, kpos=kmask_pos_f, window=window, causal=True,
+            scale=scale,
+            k_res=k_res if use_disagg else None,
+            v_res=v_res if use_disagg else None,
+            b_k=bk_rows, b_v=bv_rows, rope_theta=cfg.rope_theta,
+            use_rope=cfg.use_rope)
+    if use_disagg:
+        if cfg.use_rope:
+            sin_k, cos_k = rope_lib.rope_sincos(
+                jnp.where(kmask_pos >= _EMPTY_POS, 0, kmask_pos), hd,
+                cfg.rope_theta)
+        else:
+            sin_k = jnp.zeros(kmask_pos.shape + (hd // 2,), jnp.float32)
+            cos_k = jnp.ones(kmask_pos.shape + (hd // 2,), jnp.float32)
+        return _masked_residual_attention(
+            q, k, v, k_res, v_res, bk_rows, bv_rows,
+            sin_k.astype(q.dtype), cos_k.astype(q.dtype), qpos, kmask_pos,
+            valid_len, window, scale)
+    return _masked_mha(q, k, v, qpos, kmask_pos, valid_len, window, scale)
+
+
+def _build_mask(qpos, kmask_pos, valid_len, window, bsz, sq, sk):
+    qp = qpos[:, :, None]                          # (B, Sq, 1)
+    kp = kmask_pos[:, None, :]                     # (B, 1, Sk)
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    if valid_len is not None:
+        mask &= kp < valid_len[:, None, None]
+    return mask[:, None]                           # (B, 1, Sq, Sk)
+
+
+def _masked_mha(q, k, v, qpos, kmask_pos, valid_len, window, scale):
+    s = attn_lib._gqa_scores(q, k) * scale
+    mask = _build_mask(qpos, kmask_pos, valid_len, window,
+                       q.shape[0], q.shape[1], k.shape[1])
+    s = jnp.where(mask, s, attn_lib.NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    return attn_lib._gqa_out(p, v).astype(q.dtype)
+
+
+def _masked_residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v,
+                               sin, cos, qpos, kmask_pos, valid_len, window,
+                               scale):
+    from repro.kernels import ref as ref_mod
+    k, v = ref_mod.reconstruct(k_base, v_base, k_res, v_res, b_k, b_v,
+                               sin, cos)
+    return _masked_mha(q, k, v, qpos, kmask_pos, valid_len, window, scale)
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+def _layer_window(cfg: ModelConfig) -> int:
+    return cfg.sliding_window
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        if "mm_projector" in params:
+            extra_embeds = extra_embeds @ params["mm_projector"]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def unembed(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["unembed"]
+
+
+def _layer_fn(x, p_l, cfg, *, positions, mode, cache_l, kv_len, lora_l,
+              adapter_ids, disagg, chunk_start=None):
+    h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+    attn_out, new_cache = attention(
+        p_l, h, cfg, positions=positions, mode=mode, cache=cache_l,
+        kv_len=kv_len, lora=lora_l, adapter_ids=adapter_ids, disagg=disagg,
+        window=_layer_window(cfg), chunk_start=chunk_start)
+    wo = p_l["wo"]
+    x = x + attn_out.reshape(x.shape[0], x.shape[1], -1) @ wo
+    h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+    x = x + ffn(p_l, h, cfg)
+    return x, new_cache
+
+
+def apply_layers(params, x, cfg: ModelConfig, *, positions, mode: str,
+                 cache=None, kv_len=None, lora=None, adapter_ids=None,
+                 disagg: bool = False, remat: Optional[bool] = None,
+                 chunk_start=None):
+    """Scan over the layer stack.  cache/lora leaves carry a leading L dim."""
+    remat = cfg.remat if remat is None else remat
+    layer_params = params["layers"]
+
+    def body(carry, xs):
+        xc = carry
+        p_l, cache_l, lora_l = xs
+        out, new_cache = _layer_fn(
+            xc, p_l, cfg, positions=positions, mode=mode, cache_l=cache_l,
+            kv_len=kv_len, lora_l=lora_l, adapter_ids=adapter_ids,
+            disagg=disagg, chunk_start=chunk_start)
+        return out, new_cache
+
+    body_fn = jax.checkpoint(body) if (remat and mode == "full") else body
+
+    L = cfg.num_layers
+    iv = cfg.moe_interleave if cfg.num_experts else 1
+    if iv > 1:
+        return _apply_layers_interleaved(
+            params, x, cfg, positions=positions, mode=mode, cache=cache,
+            kv_len=kv_len, lora=lora, adapter_ids=adapter_ids,
+            disagg=disagg, remat=remat)
+    dummy_cache = cache if cache is not None else jnp.zeros((L,), x.dtype)
+    dummy_lora = lora if lora is not None else jnp.zeros((L,), x.dtype)
+
+    def scan_body(carry, xs):
+        p_l, c_l, l_l = xs
+        c_in = c_l if cache is not None else None
+        l_in = l_l if lora is not None else None
+        out, new_c = body_fn(carry, (p_l, c_in, l_in))
+        return out, (new_c if new_c is not None else jnp.zeros((), x.dtype))
+
+    if cfg.scan_layers:
+        groups = cfg.scan_groups
+        if groups and groups > 1 and L % groups == 0 and mode == "full":
+            # two-level scan: outer over groups (remat'd), inner over layers
+            inner = L // groups
+            resh = lambda t: t.reshape((groups, inner) + t.shape[1:])
+            lp = jax.tree_util.tree_map(resh, layer_params)
+            lc = jax.tree_util.tree_map(resh, dummy_cache)
+            ll = jax.tree_util.tree_map(resh, dummy_lora)
+
+            def outer_body(carry, xs):
+                p_g, c_g, l_g = xs
+
+                def inner_scan(carry2, xs2):
+                    return scan_body(carry2, xs2)
+
+                out, cs = jax.lax.scan(inner_scan, carry, (p_g, c_g, l_g))
+                return out, cs
+
+            outer = jax.checkpoint(outer_body) if remat else outer_body
+            x, new_caches = jax.lax.scan(outer, x, (lp, lc, ll))
+            new_caches = jax.tree_util.tree_map(
+                lambda t: t.reshape((L,) + t.shape[2:]), new_caches)
+        else:
+            x, new_caches = jax.lax.scan(
+                scan_body, x, (layer_params, dummy_cache, dummy_lora))
+    else:
+        new_list = []
+        for i in range(L):
+            p_l = jax.tree_util.tree_map(lambda t: t[i], layer_params)
+            c_l = jax.tree_util.tree_map(lambda t: t[i], cache) \
+                if cache is not None else None
+            l_l = jax.tree_util.tree_map(lambda t: t[i], lora) \
+                if lora is not None else None
+            x, nc = body_fn(x, (p_l, c_l, l_l))
+            new_list.append(nc)
+        if cache is not None:
+            new_caches = jax.tree_util.tree_map(
+                lambda *ts: jnp.stack(ts), *new_list)
+        else:
+            new_caches = None
+    if cache is None:
+        new_caches = None
+    return x, new_caches
+
+
+_ATTN_KEYS = ("ln1", "ln2", "wq", "wk", "wv", "wo")
+_DENSE_KEYS = ("w_gate", "w_up", "w_down")
+_MOE_KEYS = ("router", "w_gate_e", "w_up_e", "w_down_e",
+             "w_gate_s", "w_up_s", "w_down_s")
+
+
+def _apply_layers_interleaved(params, x, cfg: ModelConfig, *, positions,
+                              mode, cache, kv_len, lora, adapter_ids,
+                              disagg, remat):
+    """Scan over groups of ``moe_interleave`` layers: (iv-1) dense-MLP
+    sublayers followed by one MoE sublayer (llama4-style)."""
+    lp = params["layers"]
+    L, iv = cfg.num_layers, cfg.moe_interleave
+    G = L // iv
+
+    def resh(n):
+        return lambda t: t.reshape((G, n) + t.shape[1:])
+
+    attn_tree = {k: resh(iv)(lp[k]) for k in _ATTN_KEYS}
+    dense_tree = {k: resh(iv - 1)(lp[k]) for k in _DENSE_KEYS}
+    moe_tree = {k: lp[k] for k in _MOE_KEYS if k in lp}       # (G, ...)
+    cache_g = jax.tree_util.tree_map(resh(iv), cache) \
+        if cache is not None else jnp.zeros((G,), x.dtype)
+    lora_g = jax.tree_util.tree_map(resh(iv), lora) \
+        if lora is not None else jnp.zeros((G,), x.dtype)
+
+    def group_body(carry, xs):
+        at, dn, mo, c_g, l_g = xs
+        xc = carry
+        ncs = []
+        for j in range(iv):
+            p_att = {k: at[k][j] for k in _ATTN_KEYS}
+            p_mlp = mo if j == iv - 1 else {k: dn[k][j] for k in _DENSE_KEYS}
+            p_l = {**p_att, **p_mlp}
+            c_l = jax.tree_util.tree_map(lambda t: t[j], c_g) \
+                if cache is not None else None
+            l_l = jax.tree_util.tree_map(lambda t: t[j], l_g) \
+                if lora is not None else None
+            xc, nc = _layer_fn(xc, p_l, cfg, positions=positions, mode=mode,
+                               cache_l=c_l, kv_len=kv_len, lora_l=l_l,
+                               adapter_ids=adapter_ids, disagg=disagg)
+            ncs.append(nc if nc is not None else jnp.zeros((), xc.dtype))
+        if cache is not None:
+            out_c = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *ncs)
+        else:
+            out_c = jnp.zeros((), xc.dtype)
+        return xc, out_c
+
+    fn = jax.checkpoint(group_body) if (remat and mode == "full") \
+        else group_body
+    x, new_caches = jax.lax.scan(
+        fn, x, (attn_tree, dense_tree, moe_tree, cache_g, lora_g))
+    if cache is not None:
+        new_caches = jax.tree_util.tree_map(
+            lambda t: t.reshape((L,) + t.shape[2:]), new_caches)
+    else:
+        new_caches = None
+    return x, new_caches
+
+
+def forward(params, tokens, cfg: ModelConfig, *, extra_embeds=None,
+            lora=None, adapter_ids=None, disagg: bool = False) -> jnp.ndarray:
+    """Full causal pass -> logits (B, S_total, V)."""
+    x = embed_tokens(params, tokens, cfg, extra_embeds)
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (bsz, s))
+    x, _ = apply_layers(params, x, cfg, positions=positions, mode="full",
+                        lora=lora, adapter_ids=adapter_ids, disagg=disagg)
+    return unembed(params, x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               disagg: bool = False, dtype=None) -> Params:
+    dt = dtype or cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    w = cfg.sliding_window
+    smax = min(max_len, w) if w else max_len
+    if cfg.kv_quant == "int8":
+        cache = {
+            "k": jnp.zeros((L, batch, smax, cfg.num_kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, smax, cfg.num_kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, smax, cfg.num_kv_heads),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((L, batch, smax, cfg.num_kv_heads),
+                                 jnp.float32),
+        }
+    else:
+        cache = {
+            "k": jnp.zeros((L, batch, smax, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, smax, cfg.num_kv_heads, hd), dt),
+        }
+    if disagg:
+        cache["k_res"] = jnp.zeros((L, batch, smax, cfg.lora.rank), dt)
+        cache["v_res"] = jnp.zeros((L, batch, smax, cfg.lora.rank), dt)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, disagg: bool = False) -> Params:
+    axes = {"k": ("layers", "batch", None, "kv_heads", "kv_head_dim"),
+            "v": ("layers", "batch", None, "kv_heads", "kv_head_dim")}
+    if cfg.kv_quant == "int8":
+        axes["k_scale"] = ("layers", "batch", None, "kv_heads")
+        axes["v_scale"] = ("layers", "batch", None, "kv_heads")
+    if disagg:
+        axes["k_res"] = ("layers", "batch", None, "rank")
+        axes["v_res"] = ("layers", "batch", None, "rank")
+    return axes
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, start: int = 0,
+            extra_embeds=None, lora=None, adapter_ids=None,
+            disagg: bool = False):
+    """Populate cache with the prompt; returns (last-token logits, cache)."""
+    x = embed_tokens(params, tokens, cfg, extra_embeds)
+    bsz, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(start, start + s), (bsz, s))
+    x, cache = apply_layers(params, x, cfg, positions=positions,
+                            mode="prefill", cache=cache, lora=lora,
+                            adapter_ids=adapter_ids, disagg=disagg,
+                            chunk_start=start)
+    return unembed(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, tokens, cache, kv_len, cfg: ModelConfig, *,
+                lora=None, adapter_ids=None, disagg: bool = False):
+    """One decode step. tokens: (B,), kv_len: (B,). Returns (logits, cache)."""
+    x = params["embed"][tokens][:, None]          # (B, 1, d)
+    positions = kv_len
+    x, cache = apply_layers(params, x, cfg, positions=positions,
+                            mode="decode", cache=cache, kv_len=kv_len,
+                            lora=lora, adapter_ids=adapter_ids, disagg=disagg)
+    return unembed(params, x, cfg)[:, 0], cache

@@ -1,0 +1,433 @@
+"""ForkKV serving engine: scheduler + fork/CoW lifecycle + metrics.
+
+Three cache-sharing policies (paper §7.1):
+  * ``forkkv``     — DualRadixTree, shared bCache + per-agent rCache,
+                     disaggregated attention (the paper's system)
+  * ``prefix``     — per-adapter unified caches (lossless baseline; cache
+                     shared only between requests with the SAME adapter)
+  * ``full_reuse`` — one unified cache shared across adapters (lossy
+                     baseline; first computer wins)
+
+Continuous batching: each engine step runs at most one chunked prefill
+(budgeted) plus one decode step over all running requests.  Pools are
+refcounted; under pressure the decoupled LRU eviction frees tree leaves;
+requests that cannot allocate are queued (admission control) or preempted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ServeConfig
+from repro.serving.executor import PagedExecutor, pool_bytes
+from repro.serving.pool import PagePool
+from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    adapter_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    # runtime state
+    state: str = "waiting"        # waiting | prefill | decode | done
+    output: List[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0          # next prompt position to compute
+    kv_len: int = 0               # tokens with cache present
+    base_pages: List[int] = dataclasses.field(default_factory=list)
+    res_pages: List[int] = dataclasses.field(default_factory=list)
+    owned_base: List[int] = dataclasses.field(default_factory=list)
+    owned_res: List[int] = dataclasses.field(default_factory=list)
+    coowned_base: List[int] = dataclasses.field(default_factory=list)
+    fork = None
+    finished_at: float = 0.0
+    prefilled_tokens: int = 0     # tokens this request actually computed
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, lora, sc: ServeConfig):
+        self.cfg = cfg
+        self.sc = sc
+        self.mode = sc.mode
+        disagg = sc.mode == "forkkv"
+        self.base_pool = PagePool(sc.max_pages, sc.page_size, "base")
+        # EQUAL BYTE BUDGETS, not equal page counts: an rCache page holds
+        # the same tokens in r/kv_dim of the bytes (the paper's asymmetry),
+        # so the residual pool gets kv_dim/r x more pages per byte.
+        res_factor = max(1, cfg.kv_dim // max(cfg.lora.rank, 1))             if disagg else 1
+        n_res_pages = sc.max_pages * res_factor if disagg else sc.max_pages
+        self.res_pool = PagePool(n_res_pages, sc.page_size, "residual")
+        # reserve the dump page in both pools
+        dump_b = self.base_pool.alloc(1)[0]
+        dump_r = self.res_pool.alloc(1)[0]
+        self.max_pages_per_req = min(sc.max_pages_per_req,
+                                     sc.max_pages - 2)
+        self.executor = PagedExecutor(cfg, params, lora, sc, disagg,
+                                      self.max_pages_per_req)
+        self.executor.dump_page = dump_b
+        self.dump_b, self.dump_r = dump_b, dump_r
+        if self.mode == "forkkv":
+            self.dual = DualRadixTree(self.base_pool, self.res_pool)
+        elif self.mode == "prefix":
+            # unified cache, keyed per adapter: a forest over the base pool
+            self.forest = ResidualForest(self.base_pool)
+        else:                      # full_reuse
+            self.tree = RadixTree(self.base_pool)
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.done: List[Request] = []
+        self.steps = 0
+        self.decode_batch_hist: List[int] = []
+        self.preemptions = 0
+        self.peak_base_pages = 0
+        self.peak_res_pages = 0
+        self.agent_ids_seen = set()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request) -> None:
+        req.arrival = time.time() if req.arrival == 0.0 else req.arrival
+        self.agent_ids_seen.add(req.adapter_id)
+        self.waiting.append(req)
+
+    # -------------------------------------------------------- fork/admit
+    def _match(self, req: Request):
+        """Prefix-match per policy. Returns (base_pages, res_pages, reuse)."""
+        toks = req.prompt
+        if self.mode == "forkkv":
+            fr = self.dual.fork(toks, req.adapter_id, lock=True)
+            req.fork = fr
+            return list(fr.base_pages), list(fr.res_pages), fr.reuse_len
+        if self.mode == "prefix":
+            tree = self.forest.tree(req.adapter_id)
+            pages, matched, path = tree.match_prefix(toks, lock=True)
+            tree.hits_tokens += matched
+            tree.miss_tokens += len(toks) - matched
+            req.fork = (path, req.adapter_id)
+            return list(pages), [], matched
+        pages, matched, path = self.tree.match_prefix(toks, lock=True)
+        self.tree.hits_tokens += matched
+        self.tree.miss_tokens += len(toks) - matched
+        req.fork = (path, None)
+        return list(pages), [], matched
+
+    def _release_lock(self, req: Request):
+        if req.fork is None:
+            return
+        if self.mode == "forkkv":
+            self.dual.release(req.fork, req.adapter_id)
+        elif self.mode == "prefix":
+            path, aid = req.fork
+            self.forest.tree(aid).unlock_path(path)
+        else:
+            path, _ = req.fork
+            self.tree.unlock_path(path)
+        req.fork = None
+
+    def _evict(self, pool: PagePool, n: int) -> int:
+        if self.mode == "forkkv":
+            if pool is self.base_pool:
+                return self.dual.base.evict(n)
+            return self.dual.residual.evict(n)
+        if self.mode == "prefix":
+            return self.forest.evict(n)
+        return self.tree.evict(n)
+
+    def _alloc(self, pool: PagePool, n: int) -> Optional[List[int]]:
+        if n == 0:
+            return []
+        pages = pool.alloc(n)
+        if pages is None:
+            self._evict(pool, n - pool.free_pages)
+            pages = pool.alloc(n)
+        return pages
+
+    def _try_admit(self, req: Request) -> bool:
+        page = self.sc.page_size
+        total_len = len(req.prompt) + req.max_new_tokens
+        n_pages = -(-total_len // page)
+        if n_pages > self.max_pages_per_req:
+            raise ValueError(f"request {req.rid} too long "
+                             f"({total_len} tokens > "
+                             f"{self.max_pages_per_req * page})")
+        base_pages, res_pages, reuse = self._match(req)
+        need_base = n_pages - len(base_pages)
+        new_base = self._alloc(self.base_pool, need_base)
+        if new_base is None:
+            self._release_lock(req)
+            return False
+        if self.mode == "forkkv":
+            # CoW: rCache pages beyond the residual hit are private
+            have_res = len(res_pages)
+            new_res = self._alloc(self.res_pool, n_pages - have_res)
+            if new_res is None:
+                self.base_pool.decref(new_base)
+                self._release_lock(req)
+                return False
+            req.owned_res = new_res
+            req.res_pages = res_pages + new_res
+        req.owned_base = new_base
+        req.base_pages = base_pages + new_base
+        # resume computing after the usable (both-cache) prefix
+        req.prefill_pos = reuse if self.mode == "forkkv" else reuse
+        # never resume inside a partial page of reused cache
+        req.prefill_pos = (req.prefill_pos // page) * page
+        req.kv_len = req.prefill_pos
+        req.state = "prefill" if req.prefill_pos < len(req.prompt) \
+            else "decode"
+        if req.state == "decode":
+            req.kv_len = len(req.prompt)
+        return True
+
+    # ------------------------------------------------------------ prefill
+    def _page_for(self, req: Request, pos: int, kind: str) -> int:
+        pages = req.base_pages if kind == "base" else req.res_pages
+        return pages[pos // self.sc.page_size]
+
+    def _write_page_for(self, req: Request, pos: int, kind: str) -> int:
+        """CoW: only pages this request owns may be written."""
+        page_idx = pos // self.sc.page_size
+        pages = req.base_pages if kind == "base" else req.res_pages
+        owned = req.owned_base if kind == "base" else req.owned_res
+        p = pages[page_idx]
+        if p in owned:
+            return p
+        return self.dump_b if kind == "base" else self.dump_r
+
+    def _prefill_one(self, req: Request) -> None:
+        page = self.sc.page_size
+        start = req.prefill_pos
+        end = min(len(req.prompt), start + self.sc.max_prefill_tokens)
+        chunk_tokens = req.prompt[start:end]
+        n = len(chunk_tokens)
+        bt_b = self._bt(req.base_pages)
+        bt_r = self._bt(req.res_pages if self.mode == "forkkv" else [])
+        wb = [self._write_page_for(req, p, "base")
+              for p in range(start, end)]
+        if self.mode == "forkkv":
+            wr = [self._write_page_for(req, p, "res")
+                  for p in range(start, end)]
+        else:
+            wr = [self.dump_r] * n
+        chunk_size = self.sc.max_prefill_tokens
+        next_tok, _ = self.executor.prefill_chunk(
+            chunk_tokens, start, req.adapter_id, bt_b, bt_r, wb, wr,
+            chunk_size)
+        req.prefill_pos = end
+        req.kv_len = end
+        req.prefilled_tokens += n
+        if end >= len(req.prompt):
+            req.state = "decode"
+            req.output.append(int(next_tok))
+            # the sampled token's KV is not cached yet; it will be written
+            # when the decode step consumes it
+
+    def _bt(self, pages: Sequence[int]) -> List[int]:
+        bt = list(pages)[:self.max_pages_per_req]
+        dump = self.dump_b
+        return bt + [dump] * (self.max_pages_per_req - len(bt))
+
+    # ------------------------------------------------------------- decode
+    def _decode_all(self) -> None:
+        batch = [r for r in self.running if r.state == "decode"
+                 and len(r.output) < r.max_new_tokens + 1]
+        batch = batch[:self.sc.max_batch]
+        if not batch:
+            return
+        self.decode_batch_hist.append(len(batch))
+        bsz = len(batch)
+        page = self.sc.page_size
+        toks, kvl, ids, btb, btr, wpb, wpr, woff = [], [], [], [], [], [], \
+            [], []
+        for r in batch:
+            last = r.output[-1] if r.output else r.prompt[-1]
+            toks.append(last)
+            kvl.append(r.kv_len)
+            ids.append(r.adapter_id)
+            btb.append(self._bt(r.base_pages))
+            btr.append(self._bt(r.res_pages if self.mode == "forkkv"
+                                else []))
+            wpb.append(self._write_page_for(r, r.kv_len, "base"))
+            wpr.append(self._write_page_for(r, r.kv_len, "res")
+                       if self.mode == "forkkv" else self.dump_r)
+            woff.append(r.kv_len % page)
+        # pad to max_batch for stable jit shapes
+        pad = self.sc.max_batch - bsz
+        toks += [0] * pad
+        kvl += [0] * pad
+        ids += [0] * pad
+        btb += [self._bt([])] * pad
+        btr += [self._bt([])] * pad
+        wpb += [self.dump_b] * pad
+        wpr += [self.dump_r] * pad
+        woff += [0] * pad
+        next_toks, _ = self.executor.decode(toks, kvl, ids, btb, btr, wpb,
+                                            wpr, woff)
+        for i, r in enumerate(batch):
+            r.kv_len += 1
+            r.output.append(int(next_toks[i]))
+            if len(r.output) >= r.max_new_tokens + 1 or \
+                    r.kv_len + 1 >= self.max_pages_per_req * page:
+                self._finish(r)
+
+    # ------------------------------------------------------------- finish
+    def _finish(self, req: Request) -> None:
+        req.state = "done"
+        req.finished_at = time.time()
+        full_seq = req.prompt + req.output[:-1]
+        cached_len = req.kv_len
+        seq = full_seq[:cached_len]
+        if self.mode == "forkkv":
+            self.dual.commit(seq, req.adapter_id,
+                             req.base_pages, req.res_pages)
+        elif self.mode == "prefix":
+            self.forest.insert(req.adapter_id, seq, req.base_pages)
+        else:
+            self.tree.insert(seq, req.base_pages)
+        # drop this request's ownership; tree holds its own refs now
+        self.base_pool.decref(req.owned_base)
+        self.base_pool.decref(req.coowned_base)
+        if self.mode == "forkkv":
+            self.res_pool.decref(req.owned_res)
+        self._release_lock(req)
+        self.running.remove(req)
+        self.done.append(req)
+
+    # ------------------------------------------------- broadcast fork
+    def _try_broadcast(self) -> bool:
+        """Beyond-paper (DESIGN.md §9): when several forkkv agents are at
+        the SAME position of an identical upcoming chunk (MapReduce-style
+        parallel forks), run ONE base-trajectory prefill emitting all their
+        rCaches, and share the writer's new bCache pages (CoW incref)."""
+        if self.mode != "forkkv" or not self.sc.broadcast_fork:
+            return False
+        page = self.sc.page_size
+        groups: Dict = {}
+        for r in self.running:
+            if r.state != "prefill":
+                continue
+            end = min(len(r.prompt),
+                      r.prefill_pos + self.sc.max_prefill_tokens)
+            end = (end // page) * page
+            if end <= r.prefill_pos:
+                continue
+            key = (r.prefill_pos, tuple(r.prompt[r.prefill_pos:end]))
+            groups.setdefault(key, []).append(r)
+        best = max(groups.items(), key=lambda kv: len(kv[1]),
+                   default=(None, []))
+        key, group = best
+        if len(group) < 2:
+            return False
+        start = key[0]
+        chunk = list(key[1])
+        end = start + len(chunk)
+        writer = group[0]
+        p0, p1 = start // page, end // page
+        for r in group[1:]:
+            for i in range(p0, p1):
+                wp = writer.base_pages[i]
+                old = r.base_pages[i]
+                if old == wp:
+                    continue
+                if old in r.owned_base:
+                    r.owned_base.remove(old)
+                    self.base_pool.decref([old])
+                r.base_pages[i] = wp
+                self.base_pool.incref([wp])
+                r.coowned_base.append(wp)
+        bt_b = self._bt(writer.base_pages)
+        wb = [self._write_page_for(writer, p, "base")
+              for p in range(start, end)]
+        wr_list = [[self._write_page_for(r, p, "res")
+                    for p in range(start, end)] for r in group]
+        self.executor.prefill_broadcast(
+            chunk, start, [r.adapter_id for r in group], bt_b, wb, wr_list,
+            self.sc.max_prefill_tokens)
+        for r in group:
+            r.prefill_pos = end
+            r.kv_len = end
+            r.prefilled_tokens += len(chunk) / len(group)  # amortized
+        return True
+
+    # --------------------------------------------------------------- step
+    def step(self) -> None:
+        self.steps += 1
+        # admit
+        while self.waiting and len(self.running) < self.sc.max_batch:
+            req = self.waiting[0]
+            if not self._try_admit(req):
+                break
+            self.waiting.pop(0)
+            self.running.append(req)
+        # one chunked prefill per step (broadcast if several agents share it)
+        if not self._try_broadcast():
+            for r in self.running:
+                if r.state == "prefill":
+                    self._prefill_one(r)
+                    break
+        self._decode_all()
+        self.peak_base_pages = max(self.peak_base_pages,
+                                   self.base_pool.used_pages)
+        self.peak_res_pages = max(self.peak_res_pages,
+                                  self.res_pool.used_pages)
+
+    def run(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                break
+            self.step()
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self) -> Dict:
+        pb = pool_bytes(self.executor.pools)
+        page = self.sc.page_size
+        base_bytes_page = pb["base"] / self.sc.max_pages
+        res_bytes_page = (pb["residual"] / self.executor.num_res_pages
+                          if pb["residual"] else 0)
+        n_agents = max(1, len(self.agent_ids_seen))
+        used_bytes = (self.peak_base_pages * base_bytes_page +
+                      self.peak_res_pages * res_bytes_page)
+        hit = miss = 0
+        hit_kinds = {}
+        evicted = 0
+        if self.mode == "forkkv":
+            hit = self.dual.base.hits_tokens
+            miss = self.dual.base.miss_tokens
+            hit_kinds = dict(self.dual.hit_kinds)
+            evicted = (self.dual.base.evicted_pages +
+                       self.dual.residual.evicted_pages)
+        elif self.mode == "prefix":
+            for t in self.forest.trees.values():
+                hit += t.hits_tokens
+                miss += t.miss_tokens
+            evicted = self.forest.evicted_pages
+        else:
+            hit = self.tree.hits_tokens
+            miss = self.tree.miss_tokens
+            evicted = self.tree.evicted_pages
+        prefilled = sum(r.prefilled_tokens for r in self.done)
+        prompt_tokens = sum(len(r.prompt) for r in self.done)
+        return {
+            "mode": self.mode,
+            "tasks_done": len(self.done),
+            "steps": self.steps,
+            "avg_decode_batch": (sum(self.decode_batch_hist) /
+                                 max(1, len(self.decode_batch_hist))),
+            "peak_base_pages": self.peak_base_pages,
+            "peak_res_pages": self.peak_res_pages,
+            "peak_cache_bytes": used_bytes,
+            "bytes_per_agent": used_bytes / n_agents,
+            "prefilled_tokens": prefilled,
+            "prompt_tokens": prompt_tokens,
+            "prefill_saved_frac": 1 - prefilled / max(1, prompt_tokens),
+            "hit_tokens": hit,
+            "miss_tokens": miss,
+            "hit_rate": hit / max(1, hit + miss),
+            "hit_kinds": hit_kinds,
+            "evicted_pages": evicted,
+            "preemptions": self.preemptions,
+        }

@@ -1,0 +1,339 @@
+"""Paged model executor: jit'd prefill/decode over pooled KV pages.
+
+The pools are jnp arrays of shape (L, num_pages, page_size, ...); requests
+address them through block tables.  In ForkKV mode two pools exist — the
+shared bCache pool and the per-agent rCache pool — and attention runs over
+the disaggregated layout (the XLA mirror of the ResidualAttention kernel;
+on real TPU the gather + attend lowers to the Pallas kernel with paged
+index maps, see DESIGN.md §3).
+
+CoW discipline: prefill never writes to inherited (shared) pages — the
+engine passes the reserved DUMP page as the write target for positions
+whose cache is inherited, so parent pages stay read-only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ServeConfig
+from repro.models import base
+from repro.models import transformer as tfm
+
+Params = Dict
+
+
+class Pools(NamedTuple):
+    kb: jnp.ndarray          # (L, Pb, page, Hkv, hd)  base K (RoPE'd)
+    vb: jnp.ndarray          # (L, Pb, page, Hkv, hd)  base V
+    kr: Optional[jnp.ndarray]  # (L, Pr, page, R)      residual K (no RoPE)
+    vr: Optional[jnp.ndarray]
+
+
+def make_pools(cfg: ModelConfig, num_pages: int, num_res_pages: int,
+               page_size: int, disagg: bool, dtype=None) -> Pools:
+    dt = dtype or cfg.activation_dtype
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    kb = jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads, hd), dt)
+    vb = jnp.zeros_like(kb)
+    if disagg:
+        kr = jnp.zeros((L, num_res_pages, page_size, cfg.lora.rank), dt)
+        vr = jnp.zeros_like(kr)
+    else:
+        kr = vr = None
+    return Pools(kb, vb, kr, vr)
+
+
+def pool_bytes(pools: Pools) -> Dict[str, int]:
+    out = {"base": int(pools.kb.nbytes + pools.vb.nbytes)}
+    out["residual"] = int(pools.kr.nbytes + pools.vr.nbytes) \
+        if pools.kr is not None else 0
+    return out
+
+
+class PagedExecutor:
+    """Compiled paged prefill/decode for llama-family models."""
+
+    def __init__(self, cfg: ModelConfig, params: Params,
+                 lora: Optional[Params], serve_cfg: ServeConfig,
+                 disagg: bool, max_pages_per_req: int):
+        self.cfg = cfg
+        self.params = params
+        self.lora = lora
+        self.sc = serve_cfg
+        self.disagg = disagg and lora is not None
+        self.page = serve_cfg.page_size
+        self.max_pages_per_req = max_pages_per_req
+        self.smax = max_pages_per_req * self.page
+        res_factor = max(1, cfg.kv_dim // max(cfg.lora.rank, 1))             if self.disagg else 1
+        self.num_res_pages = serve_cfg.max_pages * res_factor             if self.disagg else serve_cfg.max_pages
+        self.pools = make_pools(cfg, serve_cfg.max_pages,
+                                self.num_res_pages, self.page, self.disagg)
+        self.dump_page = serve_cfg.max_pages - 1   # reserved scratch page
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(0,),
+                                static_argnames=("chunk",))
+
+    # ------------------------------------------------------------ helpers
+    def _layer_params(self, li):
+        return jax.tree_util.tree_map(lambda t: t[li],
+                                      self.params["layers"])
+
+    def _lora_layer(self, li):
+        if self.lora is None:
+            return None
+        return jax.tree_util.tree_map(lambda t: t[li], self.lora)
+
+    def _project_kv(self, p_l, lora_l, h, sin, cos, adapter_ids):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        bsz, s, _ = h.shape
+        k_base = (h @ p_l["wk"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+        v_base = (h @ p_l["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+        if cfg.use_rope:
+            from repro.core import rope as rope_lib
+            k_base = rope_lib.apply_rope(k_base, sin, cos)
+        if self.disagg:
+            k_res = tfm._bgmv_down(h, lora_l["a_k"], lora_l["scaling"],
+                                   adapter_ids)
+            v_res = tfm._bgmv_down(h, lora_l["a_v"], lora_l["scaling"],
+                                   adapter_ids)
+            bk = lora_l["b_k"][adapter_ids]
+            bv = lora_l["b_v"][adapter_ids]
+            return k_base, v_base, k_res, v_res, bk, bv
+        if lora_l is not None:   # unified: fold LoRA exactly into K/V
+            k_off = tfm._bgmv(h, lora_l["a_k"], lora_l["b_k"],
+                              lora_l["scaling"], adapter_ids)
+            v_off = tfm._bgmv(h, lora_l["a_v"], lora_l["b_v"],
+                              lora_l["scaling"], adapter_ids)
+            k_off = k_off.reshape(bsz, s, cfg.num_kv_heads, hd)
+            v_off = v_off.reshape(bsz, s, cfg.num_kv_heads, hd)
+            if cfg.use_rope:
+                from repro.core import rope as rope_lib
+                k_off = rope_lib.apply_rope(k_off, sin, cos)
+            k_base = k_base + k_off
+            v_base = v_base + v_off
+        return k_base, v_base, None, None, None, None
+
+    # ------------------------------------------------------------- decode
+    def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
+                   bt_r, wpage_b, wpage_r, woff):
+        """One decode step for a padded batch.
+
+        tokens/kv_len/adapter_ids: (B,); bt_*: (B, maxpages) block tables;
+        wpage_*: (B,) page indices to write the new token's KV into
+        (dump page for inactive rows); woff: (B,) in-page offsets.
+        """
+        cfg = self.cfg
+        bsz = tokens.shape[0]
+        x = self.params["embed"][tokens][:, None]
+        kmask_pos = None
+        new_pools = pools
+        bidx = jnp.arange(bsz)
+        for li in range(cfg.num_layers):
+            p_l = self._layer_params(li)
+            lora_l = self._lora_layer(li)
+            h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            q, sin, cos = tfm._qkv(p_l, h, cfg, lora_l, adapter_ids,
+                                   kv_len[:, None])
+            kb_, vb_, kr_, vr_, bk, bv = self._project_kv(
+                p_l, lora_l, h, sin, cos, adapter_ids)
+            # write new token
+            kbp = new_pools.kb.at[li, wpage_b, woff].set(kb_[:, 0])
+            vbp = new_pools.vb.at[li, wpage_b, woff].set(vb_[:, 0])
+            if self.disagg:
+                krp = new_pools.kr.at[li, wpage_r, woff].set(kr_[:, 0])
+                vrp = new_pools.vr.at[li, wpage_r, woff].set(vr_[:, 0])
+            else:
+                krp, vrp = new_pools.kr, new_pools.vr
+            new_pools = Pools(kbp, vbp, krp, vrp)
+            # gather this request's pages -> contiguous view
+            kc = kbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
+            vc = vbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
+            if self.disagg:
+                krc = krp[li][bt_r].reshape(bsz, self.smax, -1)
+                vrc = vrp[li][bt_r].reshape(bsz, self.smax, -1)
+                bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
+                bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
+            else:
+                krc = vrc = bk_rows = bv_rows = None
+            if kmask_pos is None:
+                kmask_pos = jnp.broadcast_to(jnp.arange(self.smax)[None],
+                                             (bsz, self.smax))
+            attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
+                               kmask_pos, kv_len + 1, kv_len[:, None],
+                               cfg.sliding_window,
+                               cfg.resolved_head_dim ** -0.5, cfg,
+                               self.disagg)
+            x = x + attn.reshape(bsz, 1, -1) @ p_l["wo"]
+            h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            x = x + tfm.ffn(p_l, h, cfg)
+        logits = tfm.unembed(self.params, x, cfg)[:, 0]
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_pools, next_tok, logits
+
+    def decode(self, tokens, kv_len, adapter_ids, bt_b, bt_r, wpage_b,
+               wpage_r, woff):
+        self.pools, next_tok, logits = self._decode(
+            self.pools, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(kv_len, jnp.int32),
+            jnp.asarray(adapter_ids, jnp.int32),
+            jnp.asarray(bt_b, jnp.int32), jnp.asarray(bt_r, jnp.int32),
+            jnp.asarray(wpage_b, jnp.int32), jnp.asarray(wpage_r, jnp.int32),
+            jnp.asarray(woff, jnp.int32))
+        return next_tok, logits
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_id,
+                    bt_b, bt_r, wpages_b, wpages_r, *, chunk):
+        """Chunked prefill for ONE request.
+
+        tokens: (chunk,) padded; start: scalar absolute position of
+        tokens[0]; n_valid: scalar #real tokens; wpages_*: (chunk,) page to
+        write each token into (dump page where the cache is inherited —
+        CoW: shared pages are never written).
+        """
+        cfg = self.cfg
+        positions = start + jnp.arange(chunk)
+        x = self.params["embed"][tokens][None]        # (1, chunk, d)
+        ids = adapter_id[None]
+        woff = positions % self.page
+        valid = jnp.arange(chunk) < n_valid
+        new_pools = pools
+        for li in range(cfg.num_layers):
+            p_l = self._layer_params(li)
+            lora_l = self._lora_layer(li)
+            h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            q, sin, cos = tfm._qkv(p_l, h, cfg, lora_l, ids, positions[None])
+            kb_, vb_, kr_, vr_, bk, bv = self._project_kv(
+                p_l, lora_l, h, sin, cos, ids)
+            wp_b = jnp.where(valid, wpages_b, self.dump_page)
+            wp_r = jnp.where(valid, wpages_r, self.dump_page)
+            kbp = new_pools.kb.at[li, wp_b, woff].set(kb_[0])
+            vbp = new_pools.vb.at[li, wp_b, woff].set(vb_[0])
+            if self.disagg:
+                krp = new_pools.kr.at[li, wp_r, woff].set(kr_[0])
+                vrp = new_pools.vr.at[li, wp_r, woff].set(vr_[0])
+            else:
+                krp, vrp = new_pools.kr, new_pools.vr
+            new_pools = Pools(kbp, vbp, krp, vrp)
+            kc = kbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
+            vc = vbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
+            if self.disagg:
+                krc = krp[li][bt_r].reshape(1, self.smax, -1)
+                vrc = vrp[li][bt_r].reshape(1, self.smax, -1)
+                bk_rows = bk.reshape(1, cfg.lora.rank, -1)
+                bv_rows = bv.reshape(1, cfg.lora.rank, -1)
+            else:
+                krc = vrc = bk_rows = bv_rows = None
+            kmask_pos = jnp.arange(self.smax)[None]
+            attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
+                               kmask_pos, (start + n_valid)[None],
+                               positions[None], cfg.sliding_window,
+                               cfg.resolved_head_dim ** -0.5, cfg,
+                               self.disagg)
+            x = x + attn.reshape(1, chunk, -1) @ p_l["wo"]
+            h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            x = x + tfm.ffn(p_l, h, cfg)
+        # logits of the LAST VALID token
+        idx = jnp.maximum(n_valid - 1, 0)
+        logits = tfm.unembed(self.params, x[:, idx][:, None], cfg)[0, 0]
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_pools, next_tok, logits
+
+    # ------------------------------------------------- broadcast fork
+    def _prefill_broadcast_fn(self, pools: Pools, tokens, start, n_valid,
+                              adapter_ids, bt_b, wpages_b, wpages_r, *,
+                              chunk, n_agents):
+        """Beyond-paper broadcast fork (DESIGN.md §9): ONE base-trajectory
+        pass over the shared context computes rCaches for ``n_agents``
+        adapters at once (residuals are rank-r projections of the same x).
+
+        tokens: (chunk,); adapter_ids: (n_agents,); wpages_r:
+        (n_agents, chunk).  Base attention only (the approximation);
+        bCache written once via wpages_b.
+        """
+        cfg = self.cfg
+        positions = start + jnp.arange(chunk)
+        x = self.params["embed"][tokens][None]
+        woff = positions % self.page
+        valid = jnp.arange(chunk) < n_valid
+        new_pools = pools
+        for li in range(cfg.num_layers):
+            p_l = self._layer_params(li)
+            lora_l = self._lora_layer(li)
+            h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            # base trajectory: no q-LoRA
+            q, sin, cos = tfm._qkv(p_l, h, cfg, None, None, positions[None])
+            hd = cfg.resolved_head_dim
+            kb_ = (h @ p_l["wk"]).reshape(1, chunk, cfg.num_kv_heads, hd)
+            vb_ = (h @ p_l["wv"]).reshape(1, chunk, cfg.num_kv_heads, hd)
+            if cfg.use_rope:
+                from repro.core import rope as rope_lib
+                kb_ = rope_lib.apply_rope(kb_, sin, cos)
+            # all agents' residuals from the SAME x: (n_agents, chunk, r)
+            a_k = lora_l["a_k"][adapter_ids]          # (K, d, r)
+            a_v = lora_l["a_v"][adapter_ids]
+            sc = lora_l["scaling"][adapter_ids].astype(x.dtype)
+            kr_ = jnp.einsum("sd,kdr->ksr", h[0], a_k.astype(x.dtype)) \
+                * sc[:, None, None]
+            vr_ = jnp.einsum("sd,kdr->ksr", h[0], a_v.astype(x.dtype)) \
+                * sc[:, None, None]
+            wp_b = jnp.where(valid, wpages_b, self.dump_page)
+            wp_r = jnp.where(valid[None], wpages_r, self.dump_page)
+            kbp = new_pools.kb.at[li, wp_b, woff].set(kb_[0])
+            vbp = new_pools.vb.at[li, wp_b, woff].set(vb_[0])
+            krp = new_pools.kr.at[li, wp_r, woff[None]].set(kr_)
+            vrp = new_pools.vr.at[li, wp_r, woff[None]].set(vr_)
+            new_pools = Pools(kbp, vbp, krp, vrp)
+            # attention over base cache only
+            kc = kbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
+            vc = vbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
+            kmask_pos = jnp.arange(self.smax)[None]
+            attn = tfm._attend(q, kc, vc, None, None, None, None, kmask_pos,
+                               (start + n_valid)[None], positions[None],
+                               cfg.sliding_window,
+                               cfg.resolved_head_dim ** -0.5, cfg, False)
+            x = x + attn.reshape(1, chunk, -1) @ p_l["wo"]
+            h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            x = x + tfm.ffn(p_l, h, cfg)
+        return new_pools
+
+    def prefill_broadcast(self, tokens, start, adapter_ids, bt_b,
+                          wpages_b, wpages_r_list, chunk_size):
+        n = len(tokens)
+        pad = chunk_size - n
+        toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
+        wb = jnp.asarray(list(wpages_b) + [self.dump_page] * pad, jnp.int32)
+        wr = jnp.asarray([list(w) + [self.dump_page] * pad
+                          for w in wpages_r_list], jnp.int32)
+        if not hasattr(self, "_broadcast_jit"):
+            self._broadcast_jit = {}
+        key = (chunk_size, len(adapter_ids))
+        if key not in self._broadcast_jit:
+            self._broadcast_jit[key] = jax.jit(
+                self._prefill_broadcast_fn, donate_argnums=(0,),
+                static_argnames=("chunk", "n_agents"))
+        self.pools = self._broadcast_jit[key](
+            self.pools, toks, jnp.asarray(start, jnp.int32),
+            jnp.asarray(n, jnp.int32),
+            jnp.asarray(list(adapter_ids), jnp.int32),
+            jnp.asarray(bt_b, jnp.int32), wb, wr,
+            chunk=chunk_size, n_agents=len(adapter_ids))
+
+    def prefill_chunk(self, tokens, start, adapter_id, bt_b, bt_r,
+                      wpages_b, wpages_r, chunk_size):
+        n = len(tokens)
+        pad = chunk_size - n
+        toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
+        wb = jnp.asarray(list(wpages_b) + [self.dump_page] * pad, jnp.int32)
+        wr = jnp.asarray(list(wpages_r) + [self.dump_page] * pad, jnp.int32)
+        self.pools, next_tok, logits = self._prefill(
+            self.pools, toks, jnp.asarray(start, jnp.int32),
+            jnp.asarray(n, jnp.int32), jnp.asarray(adapter_id, jnp.int32),
+            jnp.asarray(bt_b, jnp.int32), jnp.asarray(bt_r, jnp.int32),
+            wb, wr, chunk=chunk_size)
+        return int(next_tok), logits

@@ -1,0 +1,294 @@
+"""Radix trees over token sequences + the ForkKV DualRadixTree (paper §5.2).
+
+A RadixTree maps token sequences to lists of KV pages (page_size tokens per
+page).  Nodes are page-aligned segments; matched pages are shared zero-copy
+via the pool's refcounts.  Eviction is LRU over *leaf* nodes, never evicting
+nodes locked by in-flight requests.
+
+DualRadixTree composes two trees with DECOUPLED lifecycles:
+  * base tree    — key = token ids           → bCache pages (shared across
+    agents, the "parent process pages")
+  * residual tree— key = (adapter id ‖ ids)  → rCache pages (per-agent CoW
+    footprint, the "child process pages")
+
+``fork()`` implements the OS-style fork: longest-prefix match inherits the
+shared bCache, then exclusive rCache pages are allocated (copy-on-write).
+A *partial hit* (base evicted, residual alive — or vice versa) degrades
+gracefully: only the missing component is recomputed (paper's decoupled
+eviction policy).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.pool import PagePool
+
+_counter = itertools.count()
+
+
+class Node:
+    __slots__ = ("key", "pages", "children", "parent", "last_access",
+                 "lock_ref")
+
+    def __init__(self, key: Tuple[int, ...], pages: List[int],
+                 parent: Optional["Node"]):
+        self.key = key                  # token segment (page-aligned length)
+        self.pages = pages              # pages covering this segment
+        self.children: Dict[int, Node] = {}
+        self.parent = parent
+        self.last_access = next(_counter)
+        self.lock_ref = 0
+
+
+class RadixTree:
+    """Page-aligned radix tree over token sequences."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.root = Node((), [], None)
+        self.hits_tokens = 0
+        self.miss_tokens = 0
+        self.evicted_pages = 0
+
+    # ----------------------------------------------------------- matching
+    def match_prefix(self, tokens: Sequence[int],
+                     lock: bool = False) -> Tuple[List[int], int,
+                                                  List[Node]]:
+        """Longest page-aligned prefix match.
+
+        Returns (pages, matched_tokens, path_nodes).  If ``lock``, every
+        node on the path gets lock_ref+1 (caller must unlock_path later).
+        """
+        tokens = tuple(tokens)
+        page = self.pool.page_size
+        node = self.root
+        pages: List[int] = []
+        matched = 0
+        path = [self.root]
+        while matched < len(tokens):
+            child = node.children.get(tokens[matched])
+            if child is None:
+                break
+            rest = tokens[matched:]
+            common = 0
+            for a, b in zip(child.key, rest):
+                if a != b:
+                    break
+                common += 1
+            common = (common // page) * page     # page-aligned sharing only
+            if common == 0:
+                break
+            if common < len(child.key):
+                child = self._split(child, common)   # split; take the head
+            pages.extend(child.pages)
+            matched += len(child.key)
+            node = child
+            node.last_access = next(_counter)
+            path.append(node)
+        if lock:
+            for n in path:
+                n.lock_ref += 1
+        return pages, matched, path
+
+    def _split(self, child: Node, keep: int) -> Node:
+        """Split ``child`` at page-aligned token offset ``keep``; returns the
+        new head node covering key[:keep]."""
+        page = self.pool.page_size
+        assert keep % page == 0 and 0 < keep < len(child.key)
+        kp = keep // page
+        head = Node(child.key[:keep], child.pages[:kp], child.parent)
+        head.last_access = child.last_access
+        head.lock_ref = child.lock_ref       # locks cover the whole path
+        child.parent.children[head.key[0]] = head
+        child.key = child.key[keep:]
+        child.pages = child.pages[kp:]
+        child.parent = head
+        head.children[child.key[0]] = child
+        return head
+
+    def unlock_path(self, path: List[Node]) -> None:
+        for n in path:
+            n.lock_ref -= 1
+            assert n.lock_ref >= 0
+
+    # ----------------------------------------------------------- insertion
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+        """Insert a fully page-aligned sequence owning ``pages``.
+
+        The tree takes one reference on every NEW page it stores (caller
+        keeps its own reference).  Returns number of pages newly adopted.
+        """
+        tokens = tuple(tokens)
+        page_size = self.pool.page_size
+        assert len(pages) >= len(tokens) // page_size, \
+            "pages must cover every full page of tokens"
+        _, matched, path = self.match_prefix(tokens)
+        node = path[-1]
+        # only full pages are insertable; trailing partial page stays private
+        full_tokens = (len(tokens) // page_size) * page_size
+        if matched >= full_tokens:
+            return 0
+        new_tokens = tokens[matched:full_tokens]
+        new_pages = list(pages[matched // page_size:full_tokens // page_size])
+        if not new_pages:
+            return 0
+        if new_tokens[0] in node.children:
+            # sibling shares a sub-page prefix: pages are page-granular so
+            # nothing can be shared — skip the insert (rare; documented
+            # limitation of page-aligned radix caching, as in SGLang)
+            return 0
+        child = Node(tuple(new_tokens), new_pages, node)
+        node.children[new_tokens[0]] = child
+        self.pool.incref(new_pages)
+        return len(new_pages)
+
+    # ------------------------------------------------------------ eviction
+    def _leaves(self) -> List[Node]:
+        out = []
+
+        def walk(n: Node):
+            if not n.children and n is not self.root:
+                out.append(n)
+            for c in n.children.values():
+                walk(c)
+
+        walk(self.root)
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Evict least-recently-used unlocked leaves until n_pages freed."""
+        freed = 0
+        while freed < n_pages:
+            leaves = [l for l in self._leaves() if l.lock_ref == 0]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_access)
+            self.pool.decref(victim.pages)
+            freed += len(victim.pages)
+            self.evicted_pages += len(victim.pages)
+            del victim.parent.children[victim.key[0]]
+        return freed
+
+    def total_nodes(self) -> int:
+        n = 0
+
+        def walk(node):
+            nonlocal n
+            n += 1
+            for c in node.children.values():
+                walk(c)
+
+        walk(self.root)
+        return n - 1
+
+
+class ForkResult:
+    __slots__ = ("base_pages", "base_len", "res_pages", "res_len",
+                 "reuse_len", "base_path", "res_path", "hit_kind")
+
+    def __init__(self, base_pages, base_len, res_pages, res_len, reuse_len,
+                 base_path, res_path, hit_kind):
+        self.base_pages = base_pages
+        self.base_len = base_len
+        self.res_pages = res_pages
+        self.res_len = res_len
+        self.reuse_len = reuse_len      # tokens whose BOTH caches are live
+        self.base_path = base_path
+        self.res_path = res_path
+        self.hit_kind = hit_kind        # full | partial_base | partial_res |
+                                        # partial_both | miss
+
+
+class ResidualForest:
+    """The residual radix tree: Key_res = (adapter id ‖ token ids).
+
+    Implemented as one namespace (sub-tree) per adapter id over a SHARED
+    page pool — equivalent to prefixing the key with the agent id (paper
+    §5.2) while keeping every namespace page-aligned.  LRU eviction is
+    global across namespaces (one lifecycle for the whole rCache pool).
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.trees: Dict[int, RadixTree] = {}
+        self.evicted_pages = 0
+
+    def tree(self, adapter_id: int) -> RadixTree:
+        if adapter_id not in self.trees:
+            self.trees[adapter_id] = RadixTree(self.pool)
+        return self.trees[adapter_id]
+
+    def match_prefix(self, adapter_id: int, tokens, lock=False):
+        return self.tree(adapter_id).match_prefix(tokens, lock=lock)
+
+    def insert(self, adapter_id: int, tokens, pages) -> int:
+        return self.tree(adapter_id).insert(tokens, pages)
+
+    def evict(self, n_pages: int) -> int:
+        freed = 0
+        while freed < n_pages:
+            candidates = []
+            for t in self.trees.values():
+                candidates.extend(l for l in t._leaves() if l.lock_ref == 0)
+            if not candidates:
+                break
+            victim = min(candidates, key=lambda n: n.last_access)
+            self.pool.decref(victim.pages)
+            freed += len(victim.pages)
+            self.evicted_pages += len(victim.pages)
+            del victim.parent.children[victim.key[0]]
+        return freed
+
+
+class DualRadixTree:
+    """ForkKV's coordinated dual-tree storage with fork/CoW semantics."""
+
+    def __init__(self, base_pool: PagePool, res_pool: PagePool):
+        self.base = RadixTree(base_pool)
+        self.residual = ResidualForest(res_pool)
+        self.fork_count = 0
+        self.hit_kinds: Dict[str, int] = {}
+
+    def fork(self, tokens: Sequence[int], adapter_id: int,
+             lock: bool = True) -> ForkResult:
+        """OS-style fork: inherit shared bCache, locate private rCache."""
+        self.fork_count += 1
+        b_pages, b_len, b_path = self.base.match_prefix(tokens, lock=lock)
+        r_pages, r_len, r_path = self.residual.match_prefix(
+            adapter_id, tokens, lock=lock)
+        reuse = min(b_len, r_len)
+        if b_len == 0 and r_len == 0:
+            kind = "miss"
+        elif reuse == b_len == r_len and reuse > 0:
+            kind = "full"
+        elif b_len < r_len:
+            kind = "partial_base"       # base evicted: recompute xW only
+        elif r_len < b_len:
+            kind = "partial_res"        # residual missing: CoW-fill xA_i
+        else:
+            kind = "partial_both" if reuse else "miss"
+        self.hit_kinds[kind] = self.hit_kinds.get(kind, 0) + 1
+        # the paper's cache-hit metric (Fig 14b) counts bCache reuse: the
+        # massive shared component; rCache reuse additionally skips the
+        # residual prefill entirely (full hit)
+        self.base.hits_tokens += b_len
+        self.base.miss_tokens += len(tokens) - b_len
+        self.residual.tree(adapter_id).hits_tokens += r_len
+        self.residual.tree(adapter_id).miss_tokens += len(tokens) - r_len
+        return ForkResult(b_pages, b_len, r_pages, r_len, reuse,
+                          b_path if lock else None,
+                          r_path if lock else None, kind)
+
+    def commit(self, tokens: Sequence[int], adapter_id: int,
+               base_pages: Sequence[int], res_pages: Sequence[int]) -> None:
+        """After generation: publish this agent's caches into both trees."""
+        self.base.insert(tokens, base_pages)
+        self.residual.insert(adapter_id, tokens, res_pages)
+
+    def release(self, fr: ForkResult, adapter_id: int) -> None:
+        if fr.base_path is not None:
+            self.base.unlock_path(fr.base_path)
+        if fr.res_path is not None:
+            self.residual.tree(adapter_id).unlock_path(fr.res_path)

@@ -1,0 +1,51 @@
+"""Minimal sharding-aware checkpointing (no orbax offline).
+
+Saves a pytree of arrays to ``<dir>/<name>.npz`` with flattened key paths;
+restores into the same treedef.  Device shardings are re-applied by the
+caller via ``jax.device_put`` with the step's shardings.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(tree, directory: str, name: str) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def restore(tree_like, directory: str, name: str):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    path = os.path.join(directory, f"{name}.npz")
+    data = np.load(path)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    new_leaves = []
+    for p, leaf in leaves_paths[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+
+
+def exists(directory: str, name: str) -> bool:
+    return os.path.exists(os.path.join(directory, f"{name}.npz"))

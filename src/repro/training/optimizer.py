@@ -1,0 +1,127 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moments).
+
+llama3-405b uses Adafactor in this repo — AdamW's 12 bytes/param does not fit
+the 512×16GB v5e footprint at our sharding (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1):
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), {"m": zeros, "v": zeros})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            delta = mhat / (jnp.sqrt(vhat) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state.inner["m"],
+                                     state.inner["v"], params)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, {"m": new_m, "v": new_v})
+
+    return init, update
+
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, decay: float = 0.8,
+              clip_threshold: float = 1.0):
+    """Factored Adafactor for >=2D params, full second moment for 1D."""
+    def init(params):
+        def per_param(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree_util.tree_map(per_param, params,
+                                               is_leaf=None))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                row_factor = jax.lax.rsqrt(vr / denom)        # same shape as vr
+                u = g * row_factor[..., None] \
+                    * jax.lax.rsqrt(vc[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state.inner)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        return new_p, OptState(step, new_s)
+
+    return init, update
+
+
+def get_optimizer(name: str, lr: float = 3e-4):
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(name)
+
+
+def opt_state_logical_axes(name: str, param_axes):
+    """Logical axes for optimizer state, mirroring the param axes."""
+    if name == "adamw":
+        return {"m": param_axes, "v": param_axes}
+
+    def per_param(ax):
+        ax = tuple(ax) if ax is not None else None
+        if ax is None:
+            return {"v": None}
+        if len(ax) >= 2:
+            return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+
+    return jax.tree_util.tree_map(
+        per_param, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None)

@@ -1,0 +1,97 @@
+"""Training step builders: full-parameter pretraining and LoRA fine-tuning.
+
+``make_train_step(cfg)`` returns a jit-compatible
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` with
+optional gradient accumulation.  ``make_lora_train_step`` freezes the base
+model and trains only the adapter stacks (how ForkKV's specialized agents
+are produced).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import base
+from repro.models.registry import get_model
+from repro.training import optimizer as opt_lib
+
+
+def _loss_fn(api, params, batch, lora=None, adapter_ids=None,
+             disagg: bool = False):
+    kwargs = {}
+    if "extra_embeds" in batch:
+        kwargs["extra_embeds"] = batch["extra_embeds"]
+    if lora is not None:
+        kwargs.update(lora=lora, adapter_ids=adapter_ids, disagg=disagg)
+    logits = api.forward(params, batch["tokens"], **kwargs)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # VLM: logits cover [patches ‖ text]; loss only on the text tail
+        logits = logits[:, -labels.shape[1]:]
+    return base.cross_entropy(logits, labels)
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    accum_steps: int = 1) -> Tuple[Callable, Callable]:
+    """Full-parameter training.  Returns (init_opt_state, step)."""
+    api = get_model(cfg)
+    init, update = opt_lib.get_optimizer(cfg.optimizer, lr)
+
+    def loss(params, batch):
+        return _loss_fn(api, params, batch)
+
+    def step(params, opt_state, batch):
+        if accum_steps > 1:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            l = lsum / accum_steps
+        else:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        params, opt_state = update(grads, opt_state, params)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm}
+
+    return init, step
+
+
+def make_lora_train_step(cfg: ModelConfig, lr: float = 1e-3,
+                         adapter_id: int = 0) -> Tuple[Callable, Callable]:
+    """LoRA fine-tuning: base params frozen, adapter stacks trained."""
+    api = get_model(cfg)
+    init, update = opt_lib.get_optimizer("adamw", lr)
+
+    def loss(lora, params, batch):
+        ids = jnp.full((batch["tokens"].shape[0],), adapter_id, jnp.int32)
+        return _loss_fn(api, params, batch, lora=lora, adapter_ids=ids)
+
+    def step(lora, opt_state, params, batch):
+        l, grads = jax.value_and_grad(loss)(lora, params, batch)
+        lora, opt_state = update(grads, opt_state, lora)
+        return lora, opt_state, {"loss": l}
+
+    return init, step
+
+
+def eval_loss(cfg: ModelConfig, params, batch, lora=None,
+              adapter_ids=None) -> jnp.ndarray:
+    api = get_model(cfg)
+    return _loss_fn(api, params, batch, lora=lora, adapter_ids=adapter_ids)

@@ -1,0 +1,218 @@
+"""End-to-end serving engine tests: modes, CoW invariants, eviction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request
+from repro.serving.workflows import WorkflowConfig, WorkflowDriver
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=16)
+    return cfg, params, lora
+
+
+def make_engine(model, mode, max_pages=256):
+    cfg, params, lora = model
+    sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=4,
+                     max_prefill_tokens=64, mode=mode, max_pages_per_req=12)
+    return Engine(cfg, params, lora, sc), cfg
+
+
+def run_one(engine, cfg, adapter, prompt, max_new=6):
+    req = Request(rid=0, adapter_id=adapter, prompt=prompt,
+                  max_new_tokens=max_new)
+    engine.submit(req)
+    while req.state != "done":
+        engine.step()
+    return req
+
+
+def test_single_request_generates(model):
+    eng, cfg = make_engine(model, "forkkv")
+    prompt = list(np.random.default_rng(0).integers(0, cfg.vocab_size, 40))
+    req = run_one(eng, cfg, adapter=1, prompt=prompt)
+    assert len(req.output) == 7            # max_new + the final unconsumed
+    assert all(0 <= t < cfg.vocab_size for t in req.output)
+
+
+def test_forkkv_base_cache_shared_across_adapters(model):
+    eng, cfg = make_engine(model, "forkkv")
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    run_one(eng, cfg, 0, shared + list(rng.integers(0, cfg.vocab_size, 8)))
+    base_after_1 = eng.base_pool.used_pages
+    res_after_1 = eng.res_pool.used_pages
+    # second agent, DIFFERENT adapter, same shared context
+    run_one(eng, cfg, 1, shared + list(rng.integers(0, cfg.vocab_size, 8)))
+    fr_kinds = eng.dual.hit_kinds
+    assert fr_kinds.get("partial_res", 0) >= 1   # bCache inherited via fork
+    # base pool grew by much less than a full context's worth
+    base_growth = eng.base_pool.used_pages - base_after_1
+    res_growth = eng.res_pool.used_pages - res_after_1
+    assert base_growth < res_growth, (base_growth, res_growth)
+
+
+def test_forkkv_same_agent_full_hit_skips_prefill(model):
+    eng, cfg = make_engine(model, "forkkv")
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    r1 = run_one(eng, cfg, 2, shared)
+    r2 = run_one(eng, cfg, 2, shared)      # identical request, same adapter
+    assert eng.dual.hit_kinds.get("full", 0) >= 1
+    assert r2.prefilled_tokens < r1.prefilled_tokens
+
+
+def test_prefix_mode_no_cross_adapter_sharing(model):
+    eng, cfg = make_engine(model, "prefix")
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    run_one(eng, cfg, 0, shared)
+    before = eng.base_pool.used_pages
+    run_one(eng, cfg, 1, shared)
+    growth = eng.base_pool.used_pages - before
+    assert growth >= len(shared) // 16     # full duplicate cache
+
+    m = eng.metrics()
+    assert m["hit_rate"] == 0.0
+
+
+def test_cow_shared_pages_not_written(model):
+    """CoW invariant: after a second agent forks, the first agent's cached
+    base pages must be byte-identical (read-only parent pages)."""
+    eng, cfg = make_engine(model, "forkkv")
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    run_one(eng, cfg, 0, shared)
+    fr = eng.dual.fork(shared, 99, lock=False)
+    pages = list(fr.base_pages)
+    snapshot = np.asarray(eng.executor.pools.kb[:, pages])
+    run_one(eng, cfg, 1, shared + [5, 6, 7])
+    after = np.asarray(eng.executor.pools.kb[:, pages])
+    np.testing.assert_array_equal(snapshot, after)
+
+
+def test_eviction_under_pressure_and_partial_hit(model):
+    eng, cfg = make_engine(model, "forkkv", max_pages=16)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 48))
+    for a in range(6):
+        extra = list(rng.integers(0, cfg.vocab_size, 32))
+        run_one(eng, cfg, a, shared + extra, max_new=4)
+    m = eng.metrics()
+    assert m["tasks_done"] == 6
+    # pool is tiny (16 pages = 256 tokens/kind): evictions must happen
+    assert m["evicted_pages"] > 0
+    # refcount sanity: every free page has ref 0 (checked via allocation)
+    assert eng.base_pool.free_pages + eng.base_pool.used_pages == 16
+
+
+def test_full_reuse_shares_everything(model):
+    eng, cfg = make_engine(model, "full_reuse")
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    run_one(eng, cfg, 0, shared)
+    before = eng.base_pool.used_pages
+    run_one(eng, cfg, 7, shared)           # different adapter still shares
+    growth = eng.base_pool.used_pages - before
+    assert growth <= 2
+
+
+def test_memory_ordering_forkkv_beats_prefix(model):
+    """The paper's core claim at engine level: with N agents over one shared
+    context, ForkKV peak memory << prefix caching peak memory."""
+    rng = np.random.default_rng(0)
+    cfg = model[0]
+    shared = list(rng.integers(0, cfg.vocab_size, 96))
+    peaks = {}
+    for mode in ("forkkv", "prefix"):
+        eng, _ = make_engine(model, mode, max_pages=512)
+        for a in range(4):
+            run_one(eng, cfg, a,
+                    shared + list(rng.integers(0, cfg.vocab_size, 8)),
+                    max_new=4)
+        m = eng.metrics()
+        peaks[mode] = m["peak_cache_bytes"]
+    assert peaks["forkkv"] < peaks["prefix"]
+
+
+def test_mapreduce_workflow_runs(model):
+    eng, cfg = make_engine(model, "forkkv", max_pages=512)
+    wf = WorkflowConfig(n_workflows=1, agents_per_workflow=3,
+                        shared_context_len=64, max_new_tokens=4,
+                        vocab=cfg.vocab_size)
+    rep = WorkflowDriver(eng, wf).run_mapreduce()
+    assert rep["tasks"] == 4
+    assert rep["tasks_done"] == 4
+
+
+def test_broadcast_fork(model):
+    """Beyond-paper broadcast fork: N simultaneous agents over one context
+    prefill it ONCE (amortized), outputs stay finite, pages consistent."""
+    cfg, params, lora = model
+    from repro.core.config import ServeConfig
+    sc = ServeConfig(page_size=16, max_pages=256, max_batch=6,
+                     max_prefill_tokens=64, mode="forkkv",
+                     max_pages_per_req=12, broadcast_fork=True)
+    eng = Engine(cfg, params, lora, sc)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 64))
+    reqs = [Request(rid=i, adapter_id=i, prompt=list(shared),
+                    max_new_tokens=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    while any(r.state != "done" for r in reqs):
+        eng.step()
+    # amortization: each agent accounts ~1/3 of the shared prefill
+    total_prefilled = sum(r.prefilled_tokens for r in reqs)
+    assert total_prefilled < 2.0 * len(shared), total_prefilled
+    for r in reqs:
+        assert len(r.output) == 5
+    # pool invariant: no leaked/negative refs after completion
+    assert eng.base_pool.free_pages + eng.base_pool.used_pages == 256
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),       # adapter id
+                          st.integers(2, 5),       # shared-prefix pages
+                          st.integers(0, 24),      # extra prompt tokens
+                          st.integers(1, 4)),      # max_new
+                min_size=1, max_size=5),
+       st.sampled_from(["forkkv", "prefix", "full_reuse"]))
+def test_property_engine_invariants(model, reqs_spec, mode):
+    """Any workload, any mode: every request completes with the right
+    output length; page pools conserve pages; no negative refcounts."""
+    cfg, params, lora = model
+    sc = ServeConfig(page_size=16, max_pages=96, max_batch=4,
+                     max_prefill_tokens=64, mode=mode, max_pages_per_req=10)
+    eng = Engine(cfg, params, lora, sc)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab_size, 48))
+    reqs = []
+    for i, (aid, _, extra, max_new) in enumerate(reqs_spec):
+        prompt = shared + list(rng.integers(0, cfg.vocab_size, extra))
+        reqs.append(Request(rid=i, adapter_id=aid, prompt=prompt,
+                            max_new_tokens=max_new))
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(5000):
+        if not eng.waiting and not eng.running:
+            break
+        eng.step()
+    for r in reqs:
+        assert r.state == "done"
+        assert len(r.output) == r.max_new_tokens + 1
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+    assert eng.base_pool.free_pages + eng.base_pool.used_pages == 96
+    assert eng.res_pool.free_pages + eng.res_pool.used_pages == \
+        eng.res_pool.num_pages

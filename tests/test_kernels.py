@@ -1,0 +1,217 @@
+"""Pallas ResidualAttention kernels vs. the pure-jnp oracle.
+
+Sweeps shapes, dtypes, GQA group sizes, ranks, windows and cache-length
+padding; asserts allclose between the interpret-mode kernel and ref.py.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rope as rope_lib
+from repro.kernels import ref as ref_mod
+from repro.kernels import residual_attention as ra
+
+
+def make_inputs(key, *, bsz, sq, sk, hq, hkv, d, r, dtype, decode=False):
+    ks = jax.random.split(key, 8)
+    q = jax.random.normal(ks[0], (bsz, sq, hq, d), dtype)
+    k_base = jax.random.normal(ks[1], (bsz, sk, hkv, d), dtype)
+    v_base = jax.random.normal(ks[2], (bsz, sk, hkv, d), dtype)
+    k_res = jax.random.normal(ks[3], (bsz, sk, r), dtype) * 0.3
+    v_res = jax.random.normal(ks[4], (bsz, sk, r), dtype) * 0.3
+    b_k = jax.random.normal(ks[5], (bsz, r, hkv * d), dtype) * 0.3
+    b_v = jax.random.normal(ks[6], (bsz, r, hkv * d), dtype) * 0.3
+    kpos = jnp.broadcast_to(jnp.arange(sk), (bsz, sk))
+    sin, cos = rope_lib.rope_sincos(kpos, d)
+    sin, cos = sin.astype(dtype), cos.astype(dtype)
+    if decode:
+        kv_len = jax.random.randint(ks[7], (bsz,), 1, sk + 1)
+        qpos = (kv_len - 1)[:, None]
+    else:
+        kv_len = jnp.full((bsz,), sk, jnp.int32)
+        qpos = jnp.broadcast_to(jnp.arange(sq), (bsz, sq))
+    return q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len
+
+
+def tolerances(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bsz,sq,sk,hq,hkv,d,r", [
+    (1, 128, 128, 4, 4, 64, 16),      # MHA
+    (2, 64, 192, 8, 2, 64, 16),       # GQA group 4, sk not block-multiple
+    (1, 100, 257, 6, 1, 128, 8),      # MQA, ragged shapes
+    (2, 128, 128, 4, 4, 64, 32),      # larger rank
+])
+def test_prefill_matches_ref(dtype, bsz, sq, sk, hq, hkv, d, r):
+    inp = make_inputs(jax.random.PRNGKey(0), bsz=bsz, sq=sq, sk=sk, hq=hq,
+                      hkv=hkv, d=d, r=r, dtype=dtype)
+    q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len = inp
+    scale = d ** -0.5
+    got = ra.residual_attention_prefill(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len,
+        scale=scale, block_q=64, block_k=64, interpret=True)
+    want = ref_mod.residual_attention_ref(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+        qpos=qpos, kv_len=kv_len, scale=scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **tolerances(dtype))
+
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_prefill_sliding_window(window):
+    dtype = jnp.float32
+    inp = make_inputs(jax.random.PRNGKey(1), bsz=1, sq=96, sk=96, hq=4,
+                      hkv=2, d=64, r=16, dtype=dtype)
+    q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len = inp
+    got = ra.residual_attention_prefill(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len,
+        scale=0.125, window=window, block_q=32, block_k=32, interpret=True)
+    want = ref_mod.residual_attention_ref(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+        qpos=qpos, kv_len=kv_len, window=window, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **tolerances(dtype))
+
+
+def test_prefill_chunked_offset():
+    """Chunked prefill: queries are a later chunk attending to a longer cache."""
+    dtype = jnp.float32
+    bsz, sq, sk, hq, hkv, d, r = 1, 64, 192, 4, 2, 64, 16
+    inp = make_inputs(jax.random.PRNGKey(2), bsz=bsz, sq=sq, sk=sk, hq=hq,
+                      hkv=hkv, d=d, r=r, dtype=dtype)
+    q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, _, _ = inp
+    qpos = jnp.broadcast_to(jnp.arange(128, 128 + sq), (bsz, sq))
+    kv_len = jnp.asarray([128 + sq], jnp.int32)
+    got = ra.residual_attention_prefill(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len,
+        scale=0.125, block_q=64, block_k=64, interpret=True)
+    want = ref_mod.residual_attention_ref(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+        qpos=qpos, kv_len=kv_len, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **tolerances(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bsz,sk,hq,hkv,d,r,window", [
+    (4, 256, 8, 2, 64, 16, 0),
+    (2, 130, 4, 4, 128, 8, 0),
+    (3, 256, 4, 1, 64, 32, 64),      # MQA + sliding window
+])
+def test_decode_matches_ref(dtype, bsz, sk, hq, hkv, d, r, window):
+    inp = make_inputs(jax.random.PRNGKey(3), bsz=bsz, sq=1, sk=sk, hq=hq,
+                      hkv=hkv, d=d, r=r, dtype=dtype, decode=True)
+    q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len = inp
+    scale = d ** -0.5
+    got = ra.residual_attention_decode(
+        q[:, 0], k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, kv_len,
+        scale=scale, window=window, block_k=64, interpret=True)
+    want = ref_mod.residual_attention_ref(
+        q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
+        qpos=qpos, kv_len=kv_len, window=window, scale=scale)[:, 0]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **tolerances(dtype))
+
+
+def test_zero_residual_reduces_to_plain_attention():
+    """With zero rCache the kernel must equal vanilla attention on bCache."""
+    from repro.core import attention as attn_lib
+    dtype = jnp.float32
+    inp = make_inputs(jax.random.PRNGKey(4), bsz=2, sq=64, sk=64, hq=4,
+                      hkv=2, d=64, r=16, dtype=dtype)
+    q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len = inp
+    z = jnp.zeros_like(k_res)
+    got = ra.residual_attention_prefill(
+        q, k_base, v_base, z, z, b_k, b_v, sin, cos, qpos, kv_len,
+        scale=0.125, block_q=32, block_k=32, interpret=True)
+    want = attn_lib.mha(q, k_base, v_base, causal=True, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU linear-scan kernel (Griffin recurrence)
+# --------------------------------------------------------------------------
+def _lru_oracle(a, b, h0):
+    bb = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, states = jax.lax.associative_scan(op, (a, bb), axis=1)
+    return states, states[:, -1]
+
+
+@pytest.mark.parametrize("bsz,s,w,bs,bw,dtype", [
+    (2, 128, 128, 64, 64, jnp.float32),
+    (1, 200, 96, 64, 64, jnp.float32),      # ragged shapes (padding path)
+    (2, 128, 128, 64, 64, jnp.bfloat16),
+])
+def test_rg_lru_matches_oracle(bsz, s, w, bs, bw, dtype):
+    from repro.kernels.rg_lru import rg_lru_scan
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = jax.nn.sigmoid(jax.random.normal(k[0], (bsz, s, w))).astype(dtype)
+    b = (jax.random.normal(k[1], (bsz, s, w)) * 0.2).astype(dtype)
+    h0 = (jax.random.normal(k[2], (bsz, w)) * 0.5).astype(dtype)
+    got, hlast = rg_lru_scan(a, b, h0, block_s=bs, block_w=bw,
+                             interpret=True)
+    want, wlast = _lru_oracle(a.astype(jnp.float32),
+                              b.astype(jnp.float32),
+                              h0.astype(jnp.float32))
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **tol)
+    np.testing.assert_allclose(np.asarray(hlast, np.float32),
+                               np.asarray(wlast), **tol)
+
+
+# --------------------------------------------------------------------------
+# Paged ResidualAttention decode (block tables via scalar prefetch)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bsz,hq,hkv,d,r,page,npages,pool", [
+    (3, 8, 2, 64, 16, 16, 8, 64),
+    (2, 4, 4, 128, 8, 32, 4, 32),     # MHA, bigger pages
+])
+def test_paged_decode_matches_dense_oracle(bsz, hq, hkv, d, r, page,
+                                           npages, pool):
+    from repro.kernels.paged_residual_attention import (
+        paged_residual_attention_decode)
+    s = npages * page
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    kb_pool = jax.random.normal(ks[0], (pool, page, hkv, d))
+    vb_pool = jax.random.normal(ks[1], (pool, page, hkv, d))
+    kr_pool = jax.random.normal(ks[2], (pool, page, r)) * 0.3
+    vr_pool = jax.random.normal(ks[3], (pool, page, r)) * 0.3
+    q = jax.random.normal(ks[4], (bsz, hq, d))
+    b_k = jax.random.normal(ks[5], (bsz, r, hkv * d)) * 0.3
+    b_v = jax.random.normal(ks[6], (bsz, r, hkv * d)) * 0.3
+    perm = np.stack([np.random.default_rng(i).permutation(pool)[:npages]
+                     for i in range(bsz)])
+    bt = jnp.asarray(perm, jnp.int32)
+    kv_len = jnp.asarray([s] + [max(1, s // (i + 2)) for i in range(bsz - 1)],
+                         jnp.int32)
+    got = paged_residual_attention_decode(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        scale=d ** -0.5, interpret=True)
+    kb = kb_pool[bt].reshape(bsz, s, hkv, d)
+    vb = vb_pool[bt].reshape(bsz, s, hkv, d)
+    kr = kr_pool[bt].reshape(bsz, s, r)
+    vr = vr_pool[bt].reshape(bsz, s, r)
+    pos = jnp.broadcast_to(jnp.arange(s), (bsz, s))
+    sin, cos = rope_lib.rope_sincos(pos, d)
+    want = ref_mod.residual_attention_ref(
+        q[:, None], kb, vb, kr, vr, b_k, b_v, sin, cos,
+        qpos=(kv_len - 1)[:, None], kv_len=kv_len, scale=d ** -0.5)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

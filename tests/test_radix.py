@@ -1,0 +1,163 @@
+"""RadixTree / DualRadixTree / PagePool — unit + hypothesis property tests."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.pool import PagePool
+from repro.serving.radix import DualRadixTree, RadixTree
+
+PAGE = 4
+
+
+def make_tree(pages=256):
+    pool = PagePool(pages, PAGE)
+    return RadixTree(pool), pool
+
+
+def insert_seq(tree, pool, toks):
+    n = len(toks) // PAGE
+    pages = pool.alloc(max(n, 0)) or []
+    tree.insert(toks, pages)
+    return pages
+
+
+def test_match_after_insert_exact():
+    t, pool = make_tree()
+    toks = list(range(16))
+    pages = insert_seq(t, pool, toks)
+    got, matched, _ = t.match_prefix(toks)
+    assert matched == 16 and got == pages
+
+
+def test_partial_match_splits_node():
+    t, pool = make_tree()
+    toks = list(range(20))
+    insert_seq(t, pool, toks)
+    _, matched, _ = t.match_prefix(toks[:10])
+    assert matched == 8              # page-aligned prefix of the split node
+    # diverging branch shares the common prefix pages
+    toks2 = toks[:12] + [99] * 8
+    got, matched2, _ = t.match_prefix(toks2)
+    assert matched2 == 12
+
+
+def test_shared_pages_refcounted():
+    t, pool = make_tree()
+    toks = list(range(16))
+    pages = insert_seq(t, pool, toks)
+    for p in pages:
+        assert pool.refcount(p) == 2     # caller + tree
+    pool.decref(pages)                   # caller drops its refs
+    for p in pages:
+        assert pool.refcount(p) == 1     # tree keeps them alive
+    t.evict(len(pages))
+    for p in pages:
+        assert pool.refcount(p) == 0
+
+
+def test_eviction_respects_locks():
+    t, pool = make_tree(pages=8)
+    toks = list(range(16))
+    pages = insert_seq(t, pool, toks)
+    pool.decref(pages)
+    _, _, path = t.match_prefix(toks, lock=True)
+    assert t.evict(4) == 0               # locked: nothing evictable
+    t.unlock_path(path)
+    assert t.evict(4) >= 4
+
+
+def test_lru_order():
+    t, pool = make_tree()
+    a = [1] * 8
+    b = [2] * 8
+    pa = insert_seq(t, pool, a)
+    pb = insert_seq(t, pool, b)
+    pool.decref(pa)
+    pool.decref(pb)
+    t.match_prefix(a)                    # touch a -> b becomes LRU
+    t.evict(2)
+    _, ma, _ = t.match_prefix(a)
+    _, mb, _ = t.match_prefix(b)
+    assert ma == 8 and mb == 0
+
+
+def test_dual_fork_kinds():
+    bp, rp = PagePool(64, PAGE), PagePool(64, PAGE)
+    dual = DualRadixTree(bp, rp)
+    toks = list(range(16))
+    bpages = bp.alloc(4)
+    rpages = rp.alloc(4)
+    fr = dual.fork(toks, adapter_id=0, lock=False)
+    assert fr.hit_kind == "miss"
+    dual.commit(toks, 0, bpages, rpages)
+    fr = dual.fork(toks, adapter_id=0, lock=False)
+    assert fr.hit_kind == "full" and fr.reuse_len == 16
+    # different adapter: base hits, residual misses -> partial_res (CoW)
+    fr = dual.fork(toks, adapter_id=1, lock=False)
+    assert fr.hit_kind == "partial_res"
+    assert fr.base_len == 16 and fr.res_len == 0
+    # decoupled eviction: evict base only -> partial_base (recompute xW only)
+    dual.base.evict(4)
+    fr = dual.fork(toks, adapter_id=0, lock=False)
+    assert fr.hit_kind == "partial_base"
+    assert fr.res_len == 16 and fr.base_len == 0
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=40),
+                min_size=1, max_size=12))
+def test_property_match_is_prefix_and_refcounts_consistent(seqs):
+    """For any insert sequence set: (1) every match is a true page-aligned
+    prefix; (2) pool refcounts equal 1 (owner) + #tree nodes referencing."""
+    pool = PagePool(1024, PAGE)
+    tree = RadixTree(pool)
+    owned = []
+    for toks in seqs:
+        n = len(toks) // PAGE
+        pages = pool.alloc(n) if n else []
+        assert pages is not None
+        owned.append(pages)
+        tree.insert(toks, pages)
+        got, matched, _ = tree.match_prefix(toks)
+        assert matched % PAGE == 0
+        assert matched <= len(toks)
+        assert len(got) == matched // PAGE
+    # count tree references by walking
+    refs = {}
+
+    def walk(n):
+        for p in n.pages:
+            refs[p] = refs.get(p, 0) + 1
+        for c in n.children.values():
+            walk(c)
+
+    walk(tree.root)
+    for pages in owned:
+        for p in pages:
+            assert pool.refcount(p) == 1 + refs.get(p, 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.lists(st.integers(0, 2), min_size=4,
+                                   max_size=32)),
+                min_size=1, max_size=10),
+       st.integers(0, 30))
+def test_property_dual_fork_reuse_bounded(inserts, evictions):
+    """fork() invariants: reuse <= min(base_len, res_len) <= prompt length,
+    all page-aligned, under arbitrary inserts and evictions."""
+    bp, rp = PagePool(512, PAGE), PagePool(512, PAGE)
+    dual = DualRadixTree(bp, rp)
+    for aid, toks in inserts:
+        n = len(toks) // PAGE
+        bpages = bp.alloc(n) or []
+        rpages = rp.alloc(n) or []
+        dual.commit(toks, aid, bpages, rpages)
+    dual.base.evict(evictions)
+    for aid, toks in inserts:
+        fr = dual.fork(toks, aid, lock=False)
+        assert fr.reuse_len == min(fr.base_len, fr.res_len)
+        assert fr.base_len % PAGE == 0 and fr.res_len % PAGE == 0
+        assert fr.base_len <= len(toks) and fr.res_len <= len(toks)
+        assert len(fr.base_pages) == fr.base_len // PAGE
+        assert len(fr.res_pages) == fr.res_len // PAGE

@@ -1,0 +1,131 @@
+"""System-level behaviour: the paper's quality claims at small scale.
+
+Fig. 5 analogue — with multiple LoRA agents over one shared context:
+  * ForkKV (shared bCache + per-agent rCache) keeps hidden states close to
+    exact per-agent caching (high cosine similarity),
+  * full reuse (share EVERYTHING across adapters) diverges much further.
+Plus: engine output parity against direct model decoding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import LoRAConfig, ModelConfig, ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request
+
+
+def cos_sim(a, b):
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="sys", family="dense", num_layers=4, d_model=128,
+                      num_heads=8, num_kv_heads=4, d_ff=256, vocab_size=512,
+                      dtype="float32", lora=LoRAConfig(rank=8), remat=False)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=4)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 48), 0,
+                                cfg.vocab_size)
+    return cfg, params, lora, tokens
+
+
+def _decode_with_cache(cfg, params, lora, tokens, cache, kv_len, ids,
+                       disagg, steps=8):
+    """Greedy-decode ``steps`` tokens given a prefilled cache."""
+    outs = []
+    logits_hist = []
+    last = tokens[:, -1]
+    for _ in range(steps):
+        lg, cache = tfm.decode_step(params, last, cache, kv_len, cfg,
+                                    lora=lora, adapter_ids=ids,
+                                    disagg=disagg)
+        logits_hist.append(lg)
+        last = jnp.argmax(lg, -1)
+        outs.append(int(last[0]))
+        kv_len = kv_len + 1
+    return outs, logits_hist
+
+
+def test_forkkv_divergence_bounded_vs_full_reuse(setup):
+    """ForkKV's lossy step (agent B reuses agent A's bCache) must stay far
+    closer to exact than full reuse (agent B reuses ALL of A's cache)."""
+    cfg, params, lora, tokens = setup
+    B = tokens.shape[0]
+    ids_a = jnp.zeros((B,), jnp.int32)
+    ids_b = jnp.full((B,), 3, jnp.int32)
+
+    # exact: agent B prefills its own full (unified) cache
+    cache = tfm.init_cache(cfg, B, 96, dtype=jnp.float32)
+    lg_exact, cache_exact = tfm.prefill(params, tokens, cache, cfg,
+                                        lora=lora, adapter_ids=ids_b)
+
+    # ForkKV: bCache from agent A's trajectory, rCache/Q from agent B
+    cache = tfm.init_cache(cfg, B, 96, disagg=True, dtype=jnp.float32)
+    _, cache_a = tfm.prefill(params, tokens, cache, cfg, lora=lora,
+                             adapter_ids=ids_a, disagg=True)
+    cache_fork = dict(cache_a)
+    # agent B recomputes only its residuals over the SHARED bCache: run B's
+    # disagg prefill and keep A's base entries (the shared, lossy part)
+    cache_b = tfm.init_cache(cfg, B, 96, disagg=True, dtype=jnp.float32)
+    _, cache_b = tfm.prefill(params, tokens, cache_b, cfg, lora=lora,
+                             adapter_ids=ids_b, disagg=True)
+    cache_fork["k_res"] = cache_b["k_res"]
+    cache_fork["v_res"] = cache_b["v_res"]
+
+    # full reuse: agent B uses agent A's unified cache verbatim
+    cache = tfm.init_cache(cfg, B, 96, dtype=jnp.float32)
+    _, cache_full = tfm.prefill(params, tokens, cache, cfg, lora=lora,
+                                adapter_ids=ids_a)
+
+    kv_len = jnp.full((B,), tokens.shape[1], jnp.int32)
+    _, ref = _decode_with_cache(cfg, params, lora, tokens, cache_exact,
+                                kv_len, ids_b, disagg=False)
+    _, fork = _decode_with_cache(cfg, params, lora, tokens, cache_fork,
+                                 kv_len, ids_b, disagg=True)
+    _, full = _decode_with_cache(cfg, params, lora, tokens, cache_full,
+                                 kv_len, ids_b, disagg=False)
+
+    sim_fork = np.mean([cos_sim(a, b) for a, b in zip(ref, fork)])
+    sim_full = np.mean([cos_sim(a, b) for a, b in zip(ref, full)])
+    # Mechanism claim (paper Fig. 5): ForkKV stays far closer to exact than
+    # full reuse.  The paper's absolute >99% similarity relies on a TRAINED
+    # model's residual-stream robustness; on random weights the adapters
+    # perturb activations much harder, so we assert the ordering + margin
+    # here and measure the trained-model analogue in bench_quality.
+    assert sim_fork > sim_full + 0.2, (sim_fork, sim_full)
+    assert sim_fork > 0.5, sim_fork
+
+
+def test_engine_matches_direct_model(setup):
+    """A single request through the paged engine must reproduce the exact
+    same greedy output as dense-cache decoding (no sharing involved)."""
+    cfg, params, lora, tokens = setup
+    prompt = [int(t) for t in np.asarray(tokens[0])]
+    sc = ServeConfig(page_size=16, max_pages=128, max_batch=2,
+                     max_prefill_tokens=64, mode="forkkv",
+                     max_pages_per_req=8)
+    eng = Engine(cfg, params, lora, sc)
+    req = Request(rid=1, adapter_id=3, prompt=prompt, max_new_tokens=6)
+    eng.submit(req)
+    while req.state != "done":
+        eng.step()
+
+    ids = jnp.full((1,), 3, jnp.int32)
+    cache = tfm.init_cache(cfg, 1, 128, disagg=True, dtype=jnp.float32)
+    lg, cache = tfm.prefill(params, tokens, cache, cfg, lora=lora,
+                            adapter_ids=ids, disagg=True)
+    kv_len = jnp.full((1,), len(prompt), jnp.int32)
+    direct = [int(jnp.argmax(lg[0, 0]))]
+    last = jnp.asarray([direct[-1]])
+    for _ in range(6):
+        lg2, cache = tfm.decode_step(params, last, cache, kv_len, cfg,
+                                     lora=lora, adapter_ids=ids, disagg=True)
+        direct.append(int(jnp.argmax(lg2[0])))
+        last = jnp.asarray([direct[-1]])
+        kv_len = kv_len + 1
+    assert req.output[:6] == direct[:6], (req.output, direct)
