@@ -1,0 +1,46 @@
+"""Tiered KV offload benchmark (DESIGN.md §10).
+
+ReAct under device-memory pressure — the device page budget barely covers
+one request's footprint, so the seed engine's destroy-on-evict forces
+re-prefills.  Rows compare the tier disabled / enabled on the identical
+workload: ``prefilled_tokens`` drops and ``tier_hits`` appear when demoted
+pages are promoted instead of recomputed.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_workflow
+
+# device budget of 26 pages vs a working set of ~6 live agent contexts;
+# rounds=2 lets each adapter re-fork its grown context (the reuse the
+# host tier preserves across evictions).
+_PRESSURE = dict(n_workflows=3, agents=2, rounds=2, context=256,
+                 max_new=4, max_pages=26, max_pages_per_req=24,
+                 max_batch=4, instr_len=16, tool_obs_len=24)
+
+
+def main() -> None:
+    for label, host_bytes in (("off", 0), ("on", 64 << 20)):
+        t0 = time.time()
+        m = run_workflow("forkkv", "react", host_tier_bytes=host_bytes,
+                         **_PRESSURE)
+        wall_us = (time.time() - t0) * 1e6
+        emit(f"tiering.react.tier_{label}.prefilled_tokens", wall_us,
+             f"{m['prefilled_tokens']}")
+        emit(f"tiering.react.tier_{label}.prefill_saved_frac", wall_us,
+             f"{m['prefill_saved_frac']:.4f}")
+        emit(f"tiering.react.tier_{label}.tier_hits", 0,
+             f"{m['tier_hits']}")
+        emit(f"tiering.react.tier_{label}.demoted_pages", 0,
+             f"{m['demoted_pages']}")
+        emit(f"tiering.react.tier_{label}.evicted_pages", 0,
+             f"{m['evicted_pages']}")
+        emit(f"tiering.react.tier_{label}.promoted_bytes", 0,
+             f"{m['promoted_bytes']}")
+        emit(f"tiering.react.tier_{label}.preemptions", 0,
+             f"{m['preemptions']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,15 +29,20 @@ def get_tiny_model(rank: int = 8, n_adapters: int = 32):
 def run_workflow(mode: str, workflow: str = "react", *, rank: int = 8,
                  n_workflows: int = 2, agents: int = 3, context: int = 256,
                  max_new: int = 8, max_pages: int = 256,
-                 max_batch: int = 8, seed: int = 0, rounds: int = 1) -> Dict:
+                 max_batch: int = 8, seed: int = 0, rounds: int = 1,
+                 max_pages_per_req: int = 48,
+                 host_tier_bytes: int = 0, instr_len: int = 24,
+                 tool_obs_len: int = 50) -> Dict:
     cfg, params, lora = get_tiny_model(rank=rank)
     sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=max_batch,
                      max_prefill_tokens=128, mode=mode,
-                     max_pages_per_req=48)
+                     max_pages_per_req=max_pages_per_req,
+                     host_tier_bytes=host_tier_bytes)
     engine = Engine(cfg, params, lora, sc)
     wf = WorkflowConfig(n_workflows=n_workflows, agents_per_workflow=agents,
                         shared_context_len=context, max_new_tokens=max_new,
-                        vocab=cfg.vocab_size, seed=seed, rounds=rounds)
+                        vocab=cfg.vocab_size, seed=seed, rounds=rounds,
+                        instr_len=instr_len, tool_obs_len=tool_obs_len)
     driver = WorkflowDriver(engine, wf)
     return driver.run_react() if workflow == "react" \
         else driver.run_mapreduce()

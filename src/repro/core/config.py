@@ -227,3 +227,9 @@ class ServeConfig:
     broadcast_fork: bool = False
     adaptive_fallback: bool = False
     adaptive_high_watermark: float = 0.85
+    # tiered KV offload (DESIGN.md §10): > 0 enables HBM→host demotion with
+    # this many bytes of host budget; 0 keeps destroy-on-evict.
+    host_tier_bytes: int = 0
+    # policy knob: max pages promoted host→device per prefix match
+    # (0 = unlimited) — bounds the H2D copy burst a single admission pays.
+    tier_promote_limit: int = 0

@@ -87,9 +87,20 @@ def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
     return terms
 
 
+def hlo_cost_analysis(compiled) -> Dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: some
+    return one dict, others a one-element list of dicts.  Shape-only
+    normalization: an empty/None result becomes ``{}`` (as the seed's
+    ``or {}`` did) while exceptions propagate to the caller."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def analyze_compiled(lowered, compiled, chips: int,
                      model_flops: Optional[float] = None) -> Dict:
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     try:

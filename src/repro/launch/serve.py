@@ -19,14 +19,17 @@ from repro.serving.workflows import WorkflowConfig, WorkflowDriver
 
 def build_engine(mode: str, *, rank: int = 8, max_pages: int = 512,
                  max_batch: int = 8, n_adapters: int = 32,
-                 max_pages_per_req: int = 24, seed: int = 0):
+                 max_pages_per_req: int = 24, seed: int = 0,
+                 host_tier_bytes: int = 0, tier_promote_limit: int = 0):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
                                 n_adapters=n_adapters)
     sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=max_batch,
                      max_prefill_tokens=128, mode=mode,
-                     max_pages_per_req=max_pages_per_req)
+                     max_pages_per_req=max_pages_per_req,
+                     host_tier_bytes=host_tier_bytes,
+                     tier_promote_limit=tier_promote_limit)
     return Engine(cfg, params, lora, sc), cfg
 
 
@@ -41,10 +44,19 @@ def main() -> None:
     ap.add_argument("--context", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-pages", type=int, default=512)
+    ap.add_argument("--host-tier-mb", type=int, default=0,
+                    help="host KV offload budget in MiB (0 = disabled, "
+                         "DESIGN.md §10)")
+    ap.add_argument("--tier-promote-limit", type=int, default=0,
+                    help="max pages promoted host→device per match "
+                         "(0 = unlimited)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
-    engine, cfg = build_engine(args.mode, max_pages=args.max_pages)
+    engine, cfg = build_engine(
+        args.mode, max_pages=args.max_pages,
+        host_tier_bytes=args.host_tier_mb << 20,
+        tier_promote_limit=args.tier_promote_limit)
     wf = WorkflowConfig(n_workflows=args.workflows,
                         agents_per_workflow=args.agents,
                         shared_context_len=args.context,
@@ -63,6 +75,12 @@ def main() -> None:
               f"peak_res_pages={rep['peak_res_pages']} "
               f"avg_decode_batch={rep['avg_decode_batch']:.1f} "
               f"hit_kinds={rep['hit_kinds']}")
+        if args.host_tier_mb:
+            print(f"tier_hits={rep['tier_hits']} "
+                  f"demoted_pages={rep['demoted_pages']} "
+                  f"promoted_bytes={rep['promoted_bytes']} "
+                  f"host_used_bytes={rep['host_used_bytes']} "
+                  f"preemptions={rep['preemptions']}")
 
 
 if __name__ == "__main__":

@@ -12,12 +12,18 @@ Continuous batching: each engine step runs at most one chunked prefill
 (budgeted) plus one decode step over all running requests.  Pools are
 refcounted; under pressure the decoupled LRU eviction frees tree leaves;
 requests that cannot allocate are queued (admission control) or preempted.
+
+With ``ServeConfig.host_tier_bytes > 0`` both device pools are wrapped in
+:class:`~repro.serving.tiers.TieredPagePool` (DESIGN.md §10): eviction
+demotes unlocked leaves to a numpy-backed host tier instead of destroying
+them, and prefix matching during admission promotes tier-hit pages back
+into free device pages — turning the seed's eviction cliff into a copy.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 
@@ -25,6 +31,7 @@ from repro.core.config import ModelConfig, ServeConfig
 from repro.serving.executor import PagedExecutor, pool_bytes
 from repro.serving.pool import PagePool
 from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
+from repro.serving.tiers import HostTier, TieredPagePool
 
 
 @dataclasses.dataclass
@@ -44,9 +51,10 @@ class Request:
     owned_base: List[int] = dataclasses.field(default_factory=list)
     owned_res: List[int] = dataclasses.field(default_factory=list)
     coowned_base: List[int] = dataclasses.field(default_factory=list)
-    fork = None
+    fork: Optional[Any] = dataclasses.field(default=None)
     finished_at: float = 0.0
     prefilled_tokens: int = 0     # tokens this request actually computed
+    error: str = ""               # non-empty when rejected at admission
 
 
 class Engine:
@@ -55,13 +63,24 @@ class Engine:
         self.sc = sc
         self.mode = sc.mode
         disagg = sc.mode == "forkkv"
+        tiered = sc.host_tier_bytes > 0
+        # ONE host budget shared by both pools: host DRAM is one resource.
+        self.host_tier = HostTier(sc.host_tier_bytes) if tiered else None
         self.base_pool = PagePool(sc.max_pages, sc.page_size, "base")
+        if tiered:
+            self.base_pool = TieredPagePool(
+                self.base_pool, self.host_tier,
+                promote_limit=sc.tier_promote_limit)
         # EQUAL BYTE BUDGETS, not equal page counts: an rCache page holds
         # the same tokens in r/kv_dim of the bytes (the paper's asymmetry),
         # so the residual pool gets kv_dim/r x more pages per byte.
         res_factor = max(1, cfg.kv_dim // max(cfg.lora.rank, 1))             if disagg else 1
         n_res_pages = sc.max_pages * res_factor if disagg else sc.max_pages
         self.res_pool = PagePool(n_res_pages, sc.page_size, "residual")
+        if tiered and disagg:
+            self.res_pool = TieredPagePool(
+                self.res_pool, self.host_tier,
+                promote_limit=sc.tier_promote_limit)
         # reserve the dump page in both pools
         dump_b = self.base_pool.alloc(1)[0]
         dump_r = self.res_pool.alloc(1)[0]
@@ -78,12 +97,27 @@ class Engine:
             self.forest = ResidualForest(self.base_pool)
         else:                      # full_reuse
             self.tree = RadixTree(self.base_pool)
+        if tiered:
+            # device↔host byte movement + back-pressure (DESIGN.md §10);
+            # bound late: the executor/trees must exist first.
+            self.base_pool.bind(
+                export_fn=lambda p: self.executor.export_pages("base", p),
+                import_fn=lambda p, b: self.executor.import_pages(
+                    "base", p, b),
+                pressure_fn=lambda n: self._evict(self.base_pool, n))
+            if disagg:
+                self.res_pool.bind(
+                    export_fn=lambda p: self.executor.export_pages("res", p),
+                    import_fn=lambda p, b: self.executor.import_pages(
+                        "res", p, b),
+                    pressure_fn=lambda n: self._evict(self.res_pool, n))
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.done: List[Request] = []
         self.steps = 0
         self.decode_batch_hist: List[int] = []
-        self.preemptions = 0
+        self.preemptions = 0          # demote-under-pressure events
+        self.rejected = 0             # requests refused at admission
         self.peak_base_pages = 0
         self.peak_res_pages = 0
         self.agent_ids_seen = set()
@@ -129,13 +163,20 @@ class Engine:
         req.fork = None
 
     def _evict(self, pool: PagePool, n: int) -> int:
+        tiered = getattr(pool, "is_tiered", False)
+        before = pool.demoted_pages if tiered else 0
         if self.mode == "forkkv":
             if pool is self.base_pool:
-                return self.dual.base.evict(n)
-            return self.dual.residual.evict(n)
-        if self.mode == "prefix":
-            return self.forest.evict(n)
-        return self.tree.evict(n)
+                freed = self.dual.base.evict(n)
+            else:
+                freed = self.dual.residual.evict(n)
+        elif self.mode == "prefix":
+            freed = self.forest.evict(n)
+        else:
+            freed = self.tree.evict(n)
+        if tiered and pool.demoted_pages > before:
+            self.preemptions += 1     # cache state pushed out under pressure
+        return freed
 
     def _alloc(self, pool: PagePool, n: int) -> Optional[List[int]]:
         if n == 0:
@@ -146,14 +187,19 @@ class Engine:
             pages = pool.alloc(n)
         return pages
 
-    def _try_admit(self, req: Request) -> bool:
+    def _try_admit(self, req: Request) -> Optional[bool]:
+        """Returns True (admitted), False (no memory — retry later) or
+        None (rejected outright: the request can never fit)."""
         page = self.sc.page_size
         total_len = len(req.prompt) + req.max_new_tokens
         n_pages = -(-total_len // page)
         if n_pages > self.max_pages_per_req:
-            raise ValueError(f"request {req.rid} too long "
-                             f"({total_len} tokens > "
-                             f"{self.max_pages_per_req * page})")
+            req.state = "done"
+            req.error = (f"rejected: request {req.rid} too long "
+                         f"({total_len} tokens > "
+                         f"{self.max_pages_per_req * page})")
+            req.finished_at = time.time()
+            return None
         base_pages, res_pages, reuse = self._match(req)
         need_base = n_pages - len(base_pages)
         new_base = self._alloc(self.base_pool, need_base)
@@ -173,7 +219,7 @@ class Engine:
         req.owned_base = new_base
         req.base_pages = base_pages + new_base
         # resume computing after the usable (both-cache) prefix
-        req.prefill_pos = reuse if self.mode == "forkkv" else reuse
+        req.prefill_pos = reuse
         # never resume inside a partial page of reused cache
         req.prefill_pos = (req.prefill_pos // page) * page
         req.kv_len = req.prefill_pos
@@ -359,7 +405,13 @@ class Engine:
         # admit
         while self.waiting and len(self.running) < self.sc.max_batch:
             req = self.waiting[0]
-            if not self._try_admit(req):
+            admitted = self._try_admit(req)
+            if admitted is None:          # impossible request: reject, keep
+                self.waiting.pop(0)       # the engine alive for the rest
+                self.done.append(req)
+                self.rejected += 1
+                continue
+            if not admitted:
                 break
             self.waiting.pop(0)
             self.running.append(req)
@@ -410,8 +462,22 @@ class Engine:
             miss = self.tree.miss_tokens
             evicted = self.tree.evicted_pages
         prefilled = sum(r.prefilled_tokens for r in self.done)
-        prompt_tokens = sum(len(r.prompt) for r in self.done)
+        prompt_tokens = sum(len(r.prompt) for r in self.done
+                            if not r.error)
+        tier = {"tier_hits": 0, "demoted_pages": 0, "demoted_bytes": 0,
+                "promoted_pages": 0, "promoted_bytes": 0,
+                "host_evicted_pages": 0, "dropped_device_pages": 0}
+        for pool in (self.base_pool, self.res_pool):
+            if getattr(pool, "is_tiered", False):
+                for k, v in pool.stats().items():
+                    if k in tier:
+                        tier[k] += v
+        # device cache destroyed by host-LRU cascades is real eviction too
+        evicted += tier["dropped_device_pages"]
+        tier["host_used_bytes"] = (self.host_tier.used_bytes
+                                   if self.host_tier else 0)
         return {
+            **tier,
             "mode": self.mode,
             "tasks_done": len(self.done),
             "steps": self.steps,
@@ -430,4 +496,5 @@ class Engine:
             "hit_kinds": hit_kinds,
             "evicted_pages": evicted,
             "preemptions": self.preemptions,
+            "rejected": self.rejected,
         }

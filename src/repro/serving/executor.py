@@ -14,10 +14,11 @@ whose cache is inherited, so parent pages stay read-only.
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.config import ModelConfig, ServeConfig
 from repro.models import base
@@ -76,6 +77,64 @@ class PagedExecutor:
         self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(0,),
                                 static_argnames=("chunk",))
+
+    # ------------------------------------------------ tiered KV offload
+    def export_pages(self, kind: str,
+                     page_ids: Sequence[int]) -> List[Dict]:
+        """Device→host copy of whole KV pages (DESIGN.md §10).
+
+        ``kind`` selects the pool ("base" → kb/vb, "res" → kr/vr).  Returns
+        one blob per page — ``{"k": (L, page, ...), "v": ...}`` numpy
+        arrays holding the exact bytes, so a later :meth:`import_pages`
+        restores the cache bit-identically.
+        """
+        ids = jnp.asarray(list(page_ids), jnp.int32)
+        if kind == "base":
+            k, v = self.pools.kb, self.pools.vb
+        else:
+            k, v = self.pools.kr, self.pools.vr
+        karr = np.asarray(k[:, ids])          # (L, n, page, ...)
+        varr = np.asarray(v[:, ids])
+        # per-page COPIES, not views: each blob must be independently
+        # freeable or the HostTier's byte accounting undercounts (a
+        # surviving 1-page view would pin the whole n-page export)
+        return [{"k": karr[:, i].copy(), "v": varr[:, i].copy()}
+                for i in range(len(page_ids))]
+
+    def import_pages(self, kind: str, page_ids: Sequence[int],
+                     blobs: Sequence[Dict]) -> None:
+        """Host→device copy: write blobs back into freshly allocated pages
+        (the promotion half of the tier lifecycle).
+
+        The scatter runs jitted with the pools donated, so XLA updates the
+        pool buffers in place — O(pages promoted), not a copy of the whole
+        pool.  Page counts are bucketed to powers of two (padding repeats
+        page 0 with its own blob: duplicate index, identical value) so the
+        number of compiled variants stays logarithmic.
+        """
+        n = len(page_ids)
+        npad = 1 << max(0, n - 1).bit_length()
+        ids = list(page_ids) + [page_ids[0]] * (npad - n)
+        blobs = list(blobs) + [blobs[0]] * (npad - n)
+        k = jnp.asarray(np.stack([b["k"] for b in blobs], axis=1))
+        v = jnp.asarray(np.stack([b["v"] for b in blobs], axis=1))
+        key = (kind, npad)
+        if not hasattr(self, "_import_jit"):
+            self._import_jit = {}
+        if key not in self._import_jit:
+            if kind == "base":
+                def fn(pools, ids_, k_, v_):
+                    return pools._replace(
+                        kb=pools.kb.at[:, ids_].set(k_),
+                        vb=pools.vb.at[:, ids_].set(v_))
+            else:
+                def fn(pools, ids_, k_, v_):
+                    return pools._replace(
+                        kr=pools.kr.at[:, ids_].set(k_),
+                        vr=pools.vr.at[:, ids_].set(v_))
+            self._import_jit[key] = jax.jit(fn, donate_argnums=(0,))
+        self.pools = self._import_jit[key](
+            self.pools, jnp.asarray(ids, jnp.int32), k, v)
 
     # ------------------------------------------------------------ helpers
     def _layer_params(self, li):

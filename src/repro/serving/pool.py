@@ -5,6 +5,12 @@ The actual cache tensors live in the executor as pooled jnp arrays of shape
 (refcounts — the CoW substrate) and free lists.  Two instances exist in
 ForkKV mode: one for the shared bCache, one for the per-agent rCache
 (decoupled lifecycles, paper §5.2).
+
+With tiered KV offload enabled (``ServeConfig.host_tier_bytes > 0``) the
+engine wraps each device pool in a :class:`repro.serving.tiers.
+TieredPagePool`, which re-exports this API unchanged and adds HBM→host
+demotion/promotion (DESIGN.md §10); callers distinguish the two via the
+``is_tiered`` class attribute.
 """
 from __future__ import annotations
 
@@ -12,6 +18,8 @@ from typing import List, Optional, Sequence
 
 
 class PagePool:
+    is_tiered = False      # TieredPagePool overrides (DESIGN.md §10)
+
     def __init__(self, num_pages: int, page_size: int, name: str = "pool"):
         self.num_pages = num_pages
         self.page_size = page_size

@@ -5,6 +5,15 @@ page).  Nodes are page-aligned segments; matched pages are shared zero-copy
 via the pool's refcounts.  Eviction is LRU over *leaf* nodes, never evicting
 nodes locked by in-flight requests.
 
+With a tiered pool (``pool.is_tiered``, DESIGN.md §10) eviction first tries
+to DEMOTE the victim to host memory: the node stays in the tree tagged
+``tier == "host"`` with its ``pages`` list holding host handles, and its
+device pages are freed.  ``match_prefix`` transparently PROMOTES host-tier
+nodes back into device pages as it walks (a *tier hit*), locking the path
+while it works so concurrent eviction pressure cannot free pages under the
+match.  Only when both the device pool and the host budget are exhausted
+does eviction destroy bytes (the seed behaviour).
+
 DualRadixTree composes two trees with DECOUPLED lifecycles:
   * base tree    — key = token ids           → bCache pages (shared across
     agents, the "parent process pages")
@@ -30,16 +39,18 @@ _counter = itertools.count()
 
 class Node:
     __slots__ = ("key", "pages", "children", "parent", "last_access",
-                 "lock_ref")
+                 "lock_ref", "tier")
 
     def __init__(self, key: Tuple[int, ...], pages: List[int],
                  parent: Optional["Node"]):
         self.key = key                  # token segment (page-aligned length)
-        self.pages = pages              # pages covering this segment
+        self.pages = pages              # device pages, or host handles when
+                                        # tier == "host" (DESIGN.md §10)
         self.children: Dict[int, Node] = {}
         self.parent = parent
         self.last_access = next(_counter)
         self.lock_ref = 0
+        self.tier = "device"            # device | host
 
 
 class RadixTree:
@@ -51,45 +62,87 @@ class RadixTree:
         self.hits_tokens = 0
         self.miss_tokens = 0
         self.evicted_pages = 0
+        self.demoted_pages = 0
 
     # ----------------------------------------------------------- matching
-    def match_prefix(self, tokens: Sequence[int],
-                     lock: bool = False) -> Tuple[List[int], int,
-                                                  List[Node]]:
+    def match_prefix(self, tokens: Sequence[int], lock: bool = False,
+                     promote: bool = True) -> Tuple[List[int], int,
+                                                    List[Node]]:
         """Longest page-aligned prefix match.
 
         Returns (pages, matched_tokens, path_nodes).  If ``lock``, every
         node on the path gets lock_ref+1 (caller must unlock_path later).
+
+        The path is locked incrementally DURING the walk (and unlocked at
+        the end unless ``lock``): with a tiered pool, promoting a host-tier
+        node may apply eviction pressure, and the walk's own pages must not
+        be demoted under it.  Host-tier nodes on the path are promoted back
+        to device pages (a tier hit); a failed promotion truncates the
+        match — a graceful partial hit, never a corrupt one.
+
+        ``promote=False`` (used by :meth:`insert`, which only needs the
+        match POSITION) traverses host-tier nodes without touching their
+        bytes instead of paying H2D copies for pages the caller will
+        never read; the returned ``pages`` then cover only the device
+        portion and may be shorter than ``matched`` implies.
         """
         tokens = tuple(tokens)
         page = self.pool.page_size
+        tiered = getattr(self.pool, "is_tiered", False)
+        if tiered:
+            self.pool.begin_match()
         node = self.root
         pages: List[int] = []
         matched = 0
         path = [self.root]
-        while matched < len(tokens):
-            child = node.children.get(tokens[matched])
-            if child is None:
-                break
-            rest = tokens[matched:]
-            common = 0
-            for a, b in zip(child.key, rest):
-                if a != b:
+        self.root.lock_ref += 1
+        try:
+            while matched < len(tokens):
+                child = node.children.get(tokens[matched])
+                if child is None:
                     break
-                common += 1
-            common = (common // page) * page     # page-aligned sharing only
-            if common == 0:
-                break
-            if common < len(child.key):
-                child = self._split(child, common)   # split; take the head
-            pages.extend(child.pages)
-            matched += len(child.key)
-            node = child
-            node.last_access = next(_counter)
-            path.append(node)
-        if lock:
-            for n in path:
-                n.lock_ref += 1
+                rest = tokens[matched:]
+                common = 0
+                for a, b in zip(child.key, rest):
+                    if a != b:
+                        break
+                    common += 1
+                common = (common // page) * page   # page-aligned sharing only
+                if common == 0:
+                    break
+                if common < len(child.key):
+                    child = self._split(child, common)  # split; take the head
+                if child.tier != "device" and promote:
+                    room = self.pool.promote_room() if tiered else None
+                    if room == 0:
+                        break            # per-match promote budget spent
+                    if room is not None and len(child.pages) > room:
+                        # promote only the head the budget allows; the tail
+                        # stays on host for a later match to pick up
+                        child = self._split(child, room * page)
+                child.lock_ref += 1
+                try:
+                    ok = child.tier == "device" or not promote or (
+                        tiered and self.pool.promote_node(child))
+                except BaseException:
+                    child.lock_ref -= 1
+                    raise
+                if not ok:
+                    child.lock_ref -= 1
+                    break                # host budget / device pool exhausted
+                if child.tier == "device":
+                    pages.extend(child.pages)
+                matched += len(child.key)
+                node = child
+                node.last_access = next(_counter)
+                path.append(node)
+        except BaseException:
+            # a failed promotion copy must not leave the walk's locks
+            # behind — a leaked lock pins pages against eviction forever
+            self.unlock_path(path)
+            raise
+        if not lock:
+            self.unlock_path(path)
         return pages, matched, path
 
     def _split(self, child: Node, keep: int) -> Node:
@@ -101,6 +154,9 @@ class RadixTree:
         head = Node(child.key[:keep], child.pages[:kp], child.parent)
         head.last_access = child.last_access
         head.lock_ref = child.lock_ref       # locks cover the whole path
+        head.tier = child.tier
+        if head.tier == "host" and getattr(self.pool, "is_tiered", False):
+            self.pool.retarget(head.pages, head)   # handles moved to head
         child.parent.children[head.key[0]] = head
         child.key = child.key[keep:]
         child.pages = child.pages[kp:]
@@ -109,9 +165,22 @@ class RadixTree:
         return head
 
     def unlock_path(self, path: List[Node]) -> None:
-        for n in path:
-            n.lock_ref -= 1
-            assert n.lock_ref >= 0
+        """Release the locks taken by a previous match (lock=True).
+
+        Walks the CURRENT parent chain from the deepest locked node rather
+        than the recorded list: a later match may have split a locked node,
+        copying the lock onto the new head — a node the recorded list
+        cannot know about.  Every node on the chain carries exactly one
+        lock per locker, so one decrement each settles the account (and
+        with tiers, leaves nothing permanently pinned against eviction).
+        """
+        if not path:
+            return
+        node = path[-1]
+        while node is not None:
+            node.lock_ref -= 1
+            assert node.lock_ref >= 0
+            node = node.parent
 
     # ----------------------------------------------------------- insertion
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
@@ -124,7 +193,7 @@ class RadixTree:
         page_size = self.pool.page_size
         assert len(pages) >= len(tokens) // page_size, \
             "pages must cover every full page of tokens"
-        _, matched, path = self.match_prefix(tokens)
+        _, matched, path = self.match_prefix(tokens, promote=False)
         node = path[-1]
         # only full pages are insertable; trailing partial page stays private
         full_tokens = (len(tokens) // page_size) * page_size
@@ -146,29 +215,45 @@ class RadixTree:
 
     # ------------------------------------------------------------ eviction
     def _leaves(self) -> List[Node]:
+        """Device-frontier nodes: device-resident with no device-resident
+        descendant.  For a non-tiered pool this is exactly the leaf set;
+        with tiers it lets eviction walk UP the tree as leaves demote."""
         out = []
+        root = self.root
 
-        def walk(n: Node):
-            if not n.children and n is not self.root:
-                out.append(n)
+        def walk(n: Node) -> bool:           # subtree holds a device node?
+            has_device_below = False
             for c in n.children.values():
-                walk(c)
+                if walk(c):
+                    has_device_below = True
+            is_device = n is not root and n.tier == "device"
+            if is_device and not has_device_below:
+                out.append(n)
+            return is_device or has_device_below
 
-        walk(self.root)
+        walk(root)
         return out
 
     def evict(self, n_pages: int) -> int:
-        """Evict least-recently-used unlocked leaves until n_pages freed."""
+        """Free ≥ n_pages device pages from LRU unlocked victims.
+
+        Tiered pool: victims are DEMOTED to the host tier (node survives,
+        bytes preserved) and only truly evicted when the host budget is
+        exhausted too.  Non-tiered: destroy, as in the seed engine.
+        """
         freed = 0
+        skipped = set()
         while freed < n_pages:
-            leaves = [l for l in self._leaves() if l.lock_ref == 0]
+            leaves = [l for l in self._leaves()
+                      if l.lock_ref == 0 and id(l) not in skipped]
             if not leaves:
                 break
             victim = min(leaves, key=lambda n: n.last_access)
-            self.pool.decref(victim.pages)
-            freed += len(victim.pages)
-            self.evicted_pages += len(victim.pages)
-            del victim.parent.children[victim.key[0]]
+            got = _evict_one(self, victim)
+            if got == 0:
+                skipped.add(id(victim))
+                continue
+            freed += got
         return freed
 
     def total_nodes(self) -> int:
@@ -182,6 +267,44 @@ class RadixTree:
 
         walk(self.root)
         return n - 1
+
+
+def _evict_one(owner, victim: Node) -> int:
+    """Demote (tiered pool) or destroy one victim node.
+
+    ``owner`` is the RadixTree or ResidualForest doing the eviction (it
+    carries ``pool`` and the evicted/demoted counters).  Returns the number
+    of device pages that ACTUALLY became free (a destroyed victim whose
+    pages are still co-owned by a running request frees nothing yet —
+    reporting its page count would let allocation pressure falsely claim
+    room was made).  ``evicted_pages`` still counts cache entries lost.
+    A demoted victim stays in the tree; a destroyed one is unlinked,
+    taking any host-tier children with it (a device-frontier victim has
+    no device-resident descendants, so nothing else can be orphaned).
+    """
+    pool = owner.pool
+    n = len(victim.pages)
+    if getattr(pool, "is_tiered", False):
+        if pool.demote_node(victim):
+            owner.demoted_pages += n
+            return n                     # refcount==1 guard: all freed
+        if victim.children and any(pool.refcount(p) > 1
+                                   for p in victim.pages):
+            # transiently shared (e.g. a broadcast co-owner still running)
+            # with preserved host state below: destroying it would lose
+            # the subtree as collateral — skip, let the caller try the
+            # next LRU candidate
+            return 0
+        freed = len(pool.decref(victim.pages))
+        for child in list(victim.children.values()):
+            pool._drop_subtree(child)
+        del victim.parent.children[victim.key[0]]
+        owner.evicted_pages += n
+        return freed
+    freed = len(pool.decref(victim.pages))
+    del victim.parent.children[victim.key[0]]
+    owner.evicted_pages += n
+    return freed
 
 
 class ForkResult:
@@ -214,6 +337,7 @@ class ResidualForest:
         self.pool = pool
         self.trees: Dict[int, RadixTree] = {}
         self.evicted_pages = 0
+        self.demoted_pages = 0
 
     def tree(self, adapter_id: int) -> RadixTree:
         if adapter_id not in self.trees:
@@ -227,18 +351,23 @@ class ResidualForest:
         return self.tree(adapter_id).insert(tokens, pages)
 
     def evict(self, n_pages: int) -> int:
+        """Global LRU across namespaces; demotes before destroying (tiered
+        pools), exactly as :meth:`RadixTree.evict`."""
         freed = 0
+        skipped = set()
         while freed < n_pages:
             candidates = []
             for t in self.trees.values():
-                candidates.extend(l for l in t._leaves() if l.lock_ref == 0)
+                candidates.extend(l for l in t._leaves()
+                                  if l.lock_ref == 0 and id(l) not in skipped)
             if not candidates:
                 break
             victim = min(candidates, key=lambda n: n.last_access)
-            self.pool.decref(victim.pages)
-            freed += len(victim.pages)
-            self.evicted_pages += len(victim.pages)
-            del victim.parent.children[victim.key[0]]
+            got = _evict_one(self, victim)
+            if got == 0:
+                skipped.add(id(victim))
+                continue
+            freed += got
         return freed
 
 

@@ -1,0 +1,424 @@
+"""Tiered KV offload: CoW-aware HBM→host demotion/promotion (DESIGN.md §10).
+
+The seed engine destroyed KV pages on LRU eviction, forcing a full
+re-prefill of the shared bCache whenever device pages ran out.  This module
+adds a second storage tier so eviction becomes *demotion*:
+
+  * :class:`HostTier` — a numpy-backed page store with its own byte budget
+    and LRU.  Entries hold the exact bytes of one KV page (all layers, K and
+    V), so a later promotion restores the device cache bit-identically.
+  * :class:`TieredPagePool` — a façade wrapping the existing
+    :class:`~repro.serving.pool.PagePool`.  It keeps the whole refcounted
+    device-page API (``alloc``/``incref``/``decref``/…) and adds the tier
+    transitions used by the radix trees:
+
+      - ``demote_node(node)``   device pages → host blobs; the radix node
+        stays alive with ``tier == "host"`` and its ``pages`` list holding
+        host *handles* instead of device page ids.
+      - ``promote_node(node)``  host blobs → freshly allocated device pages
+        (applying back-pressure through ``pressure_fn`` when the device
+        pool is full); the node returns to ``tier == "device"``.
+
+CoW invariants across tiers (DESIGN.md §10):
+  * only pages whose sole reference is the radix tree (refcount == 1) are
+    demoted — pages shared with in-flight requests never leave the device;
+  * a demoted page is immutable in host memory; one demoted bCache page
+    serves every agent that later re-forks it (the promotion re-creates a
+    shared, refcounted device page);
+  * nodes on a locked radix path (``lock_ref > 0``) are pinned in whichever
+    tier they occupy: device eviction skips them and the host LRU refuses
+    to drop their entries.
+
+When the host budget is also exhausted the tier degrades to the seed
+behaviour: true eviction (the node and its bytes are destroyed).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+# A blob is one page's worth of cache bytes: a dict of numpy arrays
+# (e.g. {"k": (L, page, Hkv, hd), "v": ...}) produced by the executor's
+# export_pages and consumed by import_pages.
+Blob = Dict[str, np.ndarray]
+
+
+def blob_bytes(blob: Blob) -> int:
+    return sum(int(a.nbytes) for a in blob.values())
+
+
+class HostTier:
+    """Numpy-backed second-tier page store: byte budget + LRU.
+
+    Handles are opaque ints.  Entries carry their *owner* (the
+    :class:`TieredPagePool` that demoted them) so a shared HostTier can
+    serve several device pools (bCache + rCache) under ONE host budget —
+    host DRAM is a single resource.  When the budget overflows, the least
+    recently used evictable entry is dropped and the owner is notified via
+    ``owner._on_host_evict(handle)`` so it can unlink the radix node.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self.used_bytes = 0
+        self._entries: Dict[int, tuple] = {}   # handle -> (blob, nbytes, owner)
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._handles = itertools.count(1)
+        # counters
+        self.put_count = 0
+        self.get_count = 0
+        self.evicted_entries = 0
+        self.evicted_bytes = 0
+
+    def __contains__(self, handle: int) -> bool:
+        return handle in self._entries
+
+    @property
+    def num_entries(self) -> int:
+        return len(self._entries)
+
+    def put(self, blob: Blob, owner=None) -> Optional[int]:
+        """Store one page blob; LRU-evict unpinned entries to make room.
+
+        Returns a handle, or None when the blob cannot fit even after
+        evicting everything evictable (budget exhausted → caller falls
+        back to true eviction).
+        """
+        nbytes = blob_bytes(blob)
+        if nbytes > self.budget_bytes:
+            return None
+        if self.used_bytes + nbytes > self.budget_bytes:
+            # one forward pass over an LRU snapshot — never rescan pinned
+            # entries; eviction hooks may drop collateral handles, so
+            # skip any that vanished under us
+            for h in list(self._lru):
+                if self.used_bytes + nbytes <= self.budget_bytes:
+                    break
+                if h not in self._entries:
+                    continue
+                _, _, own = self._entries[h]
+                if own is None or own.host_can_evict(h):
+                    self._evict(h)
+            if self.used_bytes + nbytes > self.budget_bytes:
+                return None
+        handle = next(self._handles)
+        self._entries[handle] = (blob, nbytes, owner)
+        self._lru[handle] = None
+        self.used_bytes += nbytes
+        self.put_count += 1
+        return handle
+
+    def _evict(self, handle: int) -> None:
+        blob, nbytes, owner = self._entries.pop(handle)
+        self._lru.pop(handle, None)
+        self.used_bytes -= nbytes
+        self.evicted_entries += 1
+        self.evicted_bytes += nbytes
+        if owner is not None:
+            owner._on_host_evict(handle)
+
+    def get(self, handle: int) -> Blob:
+        blob, _, _ = self._entries[handle]
+        self._lru.move_to_end(handle)
+        self.get_count += 1
+        return blob
+
+    def touch(self, handle: int) -> None:
+        if handle in self._lru:
+            self._lru.move_to_end(handle)
+
+    def can_admit(self, nbytes: int) -> bool:
+        """Could ``nbytes`` fit after evicting every unpinned entry?
+
+        Demotion reserves its FULL blob total through this before storing
+        anything: pinned (locked-node) entries don't count as evictable,
+        so a demote that cannot complete never destroys other nodes'
+        entries as collateral on the way to failing.
+        """
+        free = self.budget_bytes - self.used_bytes
+        if nbytes <= free:
+            return True
+        evictable = sum(nb for h, (_, nb, own) in self._entries.items()
+                        if own is None or own.host_can_evict(h))
+        return nbytes <= free + evictable
+
+    def free(self, handle: int) -> None:
+        """Idempotent: freeing an already-evicted handle is a no-op."""
+        if handle not in self._entries:
+            return
+        _, nbytes, _ = self._entries.pop(handle)
+        self._lru.pop(handle, None)
+        self.used_bytes -= nbytes
+
+
+class TieredPagePool:
+    """Façade over a device :class:`PagePool` adding a host demotion tier.
+
+    Exposes the full PagePool API (the radix trees and the engine keep
+    using it unchanged) plus the demote/promote transitions.  Device↔host
+    byte movement is delegated to callbacks bound by the engine:
+
+      export_fn(pages)        -> [blob, ...]   device → host copies
+      import_fn(pages, blobs)                  host → device copies
+      pressure_fn(n)                           free ≥ n device pages
+                                               (tree LRU evict/demote)
+    """
+
+    is_tiered = True
+
+    def __init__(self, pool, host: HostTier,
+                 export_fn: Optional[Callable] = None,
+                 import_fn: Optional[Callable] = None,
+                 pressure_fn: Optional[Callable[[int], int]] = None,
+                 promote_limit: int = 0):
+        self.pool = pool
+        self.host = host
+        self.export_fn = export_fn
+        self.import_fn = import_fn
+        self.pressure_fn = pressure_fn
+        self.promote_limit = promote_limit   # max pages promoted per match
+        self._node_of: Dict[int, object] = {}  # handle -> radix Node
+        self._match_promoted = 0
+        self._page_nbytes: Optional[int] = None  # learned on first export
+        # counters
+        self.tier_hits = 0            # promote events (one per node)
+        self.demoted_pages = 0
+        self.demoted_bytes = 0
+        self.promoted_pages = 0
+        self.promoted_bytes = 0
+        self.host_evicted_pages = 0   # pages truly lost from the host tier
+        self.dropped_device_pages = 0  # device pages lost to host-LRU cascade
+        self.demote_failures = 0
+        self.promote_failures = 0
+
+    def bind(self, export_fn: Callable, import_fn: Callable,
+             pressure_fn: Optional[Callable[[int], int]] = None) -> None:
+        self.export_fn = export_fn
+        self.import_fn = import_fn
+        self.pressure_fn = pressure_fn
+
+    # -------------------------------------------------- PagePool façade
+    def can_alloc(self, n: int) -> bool:
+        return self.pool.can_alloc(n)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        return self.pool.alloc(n)
+
+    def incref(self, pages: Sequence[int]) -> None:
+        self.pool.incref(pages)
+
+    def decref(self, pages: Sequence[int]) -> List[int]:
+        return self.pool.decref(pages)
+
+    def refcount(self, page: int) -> int:
+        return self.pool.refcount(page)
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return self.pool.pages_for_tokens(n_tokens)
+
+    @property
+    def num_pages(self) -> int:
+        return self.pool.num_pages
+
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    @property
+    def name(self) -> str:
+        return self.pool.name
+
+    @property
+    def used_pages(self) -> int:
+        return self.pool.used_pages
+
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_pages
+
+    @property
+    def utilization(self) -> float:
+        return self.pool.utilization
+
+    @property
+    def alloc_count(self) -> int:
+        return self.pool.alloc_count
+
+    @property
+    def oom_count(self) -> int:
+        return self.pool.oom_count
+
+    # ---------------------------------------------------- tier bridging
+    def begin_match(self) -> None:
+        """Reset the per-match promotion budget (``tier_promote_limit``)."""
+        self._match_promoted = 0
+
+    def promote_room(self) -> Optional[int]:
+        """Pages the current match may still promote (None = unlimited).
+        The matcher splits oversized host nodes at this boundary so a node
+        larger than the whole limit still promotes incrementally."""
+        if not self.promote_limit:
+            return None
+        return max(0, self.promote_limit - self._match_promoted)
+
+    def host_can_evict(self, handle: int) -> bool:
+        """Host LRU guard: entries of locked (in-use) nodes are pinned."""
+        node = self._node_of.get(handle)
+        return node is None or node.lock_ref == 0
+
+    def demote_node(self, node) -> bool:
+        """Copy a node's device pages to the host tier and free them.
+
+        CoW guard: only applies when the tree is the sole owner of every
+        page (refcount == 1).  On success the node survives with
+        ``tier == "host"`` and ``pages`` holding host handles.  Returns
+        False (caller falls back to true eviction) when the export path is
+        unbound, a page is still shared, or the host budget is exhausted.
+        """
+        pages = list(node.pages)
+        if not pages or self.export_fn is None:
+            return False
+        if any(self.pool.refcount(p) != 1 for p in pages):
+            return False
+        # Pin the WHOLE ancestor chain, not just the victim: host.put may
+        # LRU-evict a host-tier ancestor, whose _drop_subtree would reach
+        # down and free this node's device pages mid-demote (double free).
+        # Locks cover the whole path — same convention as match_prefix.
+        chain = []
+        n = node
+        while n is not None:
+            n.lock_ref += 1
+            chain.append(n)
+            n = n.parent
+        try:
+            # blob size per page is deterministic (pool bytes / num_pages):
+            # once learned, a doomed demote is rejected BEFORE paying the
+            # device→host export it would only throw away
+            if self._page_nbytes is not None and not self.host.can_admit(
+                    len(pages) * self._page_nbytes):
+                self.demote_failures += 1
+                return False
+            blobs = self.export_fn(pages)
+            self._page_nbytes = blob_bytes(blobs[0])
+            if not self.host.can_admit(sum(blob_bytes(b) for b in blobs)):
+                # the node cannot fit (budget too small, or the remainder
+                # is pinned): fail before the put loop evicts other nodes'
+                # entries as collateral for a doomed demote
+                self.demote_failures += 1
+                return False
+            handles: List[int] = []
+            nbytes = 0
+            for blob in blobs:
+                h = self.host.put(blob, self)
+                if h is None:
+                    for hh in handles:
+                        self._node_of.pop(hh, None)
+                        self.host.free(hh)
+                    self.demote_failures += 1
+                    return False
+                self._node_of[h] = node
+                handles.append(h)
+                nbytes += blob_bytes(blob)
+            self.pool.decref(pages)              # device pages become free
+            node.pages = handles
+            node.tier = "host"
+            self.demoted_pages += len(pages)
+            self.demoted_bytes += nbytes
+            return True
+        finally:
+            for n in chain:
+                n.lock_ref -= 1
+
+    def promote_node(self, node) -> bool:
+        """Copy a host-tier node back into freshly allocated device pages.
+
+        The caller must hold a lock on the node (match does), which pins
+        its host entries while ``pressure_fn`` makes room on the device.
+        On success the node is a normal device node again, its pages owned
+        by the tree (refcount 1).  Returns False when the promote budget
+        for this match is spent or the device pool stays full — the match
+        then truncates (partial hit), never corrupts.
+        """
+        handles = list(node.pages)
+        n = len(handles)
+        if n == 0 or self.import_fn is None:
+            return False
+        if self.promote_limit and self._match_promoted + n > self.promote_limit:
+            self.promote_failures += 1
+            return False
+        for h in handles:
+            self.host.touch(h)
+        pages = self.pool.alloc(n)
+        if pages is None and self.pressure_fn is not None:
+            self.pressure_fn(n - self.pool.free_pages)
+            pages = self.pool.alloc(n)
+        if pages is None:
+            self.promote_failures += 1
+            return False
+        blobs = [self.host.get(h) for h in handles]
+        self.import_fn(pages, blobs)
+        for h in handles:
+            self._node_of.pop(h, None)
+            self.host.free(h)
+        node.pages = pages
+        node.tier = "device"
+        self.tier_hits += 1
+        self.promoted_pages += n
+        self._match_promoted += n
+        self.promoted_bytes += sum(blob_bytes(b) for b in blobs)
+        return True
+
+    def retarget(self, handles: Sequence[int], node) -> None:
+        """Re-own handles after a radix node split moved them to a new node."""
+        for h in handles:
+            if h in self._node_of:
+                self._node_of[h] = node
+
+    def _on_host_evict(self, handle: int) -> None:
+        """Host LRU dropped one of our entries: the owning radix node (and
+        any children — all host-tier by construction) must go with it."""
+        node = self._node_of.pop(handle, None)
+        if node is None:
+            return
+        self._drop_subtree(node)
+
+    def _drop_subtree(self, node) -> None:
+        """Destroy a radix subtree whose bytes are gone (true eviction of
+        host-tier state).  Safe on mixed subtrees: device descendants give
+        their pages back to the device pool.
+
+        Never reachable for in-use state: a locked node implies a locked
+        ancestor chain (match and demote both pin root→node), so
+        ``host_can_evict`` refuses every entry above it — asserted here
+        so a future violation fails loudly instead of double-freeing."""
+        assert node.lock_ref == 0, "dropping a locked (in-use) radix node"
+        for child in list(node.children.values()):
+            self._drop_subtree(child)
+        if node.tier == "host":
+            self.host_evicted_pages += len(node.pages)
+            for h in node.pages:
+                self._node_of.pop(h, None)
+                self.host.free(h)       # idempotent: triggering handle gone
+        elif node.pages:
+            self.dropped_device_pages += len(node.pages)
+            self.pool.decref(node.pages)
+        if node.parent is not None:
+            node.parent.children.pop(node.key[0], None)
+        node.pages = []
+        node.children = {}
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "tier_hits": self.tier_hits,
+            "demoted_pages": self.demoted_pages,
+            "demoted_bytes": self.demoted_bytes,
+            "promoted_pages": self.promoted_pages,
+            "promoted_bytes": self.promoted_bytes,
+            "host_evicted_pages": self.host_evicted_pages,
+            "dropped_device_pages": self.dropped_device_pages,
+            "demote_failures": self.demote_failures,
+            "promote_failures": self.promote_failures,
+        }

@@ -94,7 +94,7 @@ def test_cost_analysis_counts_scan_once():
         toks = jax.ShapeDtypeStruct((2, 64), jnp.int32)
         c = jax.jit(lambda p, t: tfm.forward(p, t, cfg)).lower(
             params, toks).compile()
-        return c.cost_analysis()["flops"]
+        return roofline.hlo_cost_analysis(c)["flops"]
 
     assert flops(2, scan=True) == flops(6, scan=True)          # loop-once
     assert flops(6, scan=False) > 2 * flops(2, scan=False)     # unrolled ok
@@ -119,7 +119,7 @@ def test_analytic_matches_hlo_on_unrolled_probe():
     toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
     c = jax.jit(lambda p, t: tfm.forward(p, t, cfg)).lower(
         params, toks).compile()
-    hlo_flops = c.cost_analysis()["flops"]
+    hlo_flops = roofline.hlo_cost_analysis(c)["flops"]
     ana = analytic.forward_flops(cfg, B, S)
     assert 0.75 < ana / hlo_flops < 1.33, (ana, hlo_flops)
 
