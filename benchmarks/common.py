@@ -1,4 +1,9 @@
-"""Shared benchmark utilities: engine runner + CSV emission."""
+"""Shared benchmark utilities: ForkServer runner + CSV emission.
+
+Benchmarks run purely through the session/fork API (``repro.serving.api``)
+— no ``Request`` construction or ``engine.step()`` loops outside
+``src/repro/serving``.
+"""
 from __future__ import annotations
 
 import time
@@ -9,7 +14,7 @@ import jax
 from repro.configs.paper_models import tiny_serving_model
 from repro.core.config import ServeConfig
 from repro.models import transformer as tfm
-from repro.serving.engine import Engine
+from repro.serving.api import ForkServer
 from repro.serving.workflows import WorkflowConfig, WorkflowDriver
 
 _MODEL_CACHE: Dict = {}
@@ -38,12 +43,12 @@ def run_workflow(mode: str, workflow: str = "react", *, rank: int = 8,
                      max_prefill_tokens=128, mode=mode,
                      max_pages_per_req=max_pages_per_req,
                      host_tier_bytes=host_tier_bytes)
-    engine = Engine(cfg, params, lora, sc)
+    server = ForkServer(cfg, params, lora, sc)
     wf = WorkflowConfig(n_workflows=n_workflows, agents_per_workflow=agents,
                         shared_context_len=context, max_new_tokens=max_new,
                         vocab=cfg.vocab_size, seed=seed, rounds=rounds,
                         instr_len=instr_len, tool_obs_len=tool_obs_len)
-    driver = WorkflowDriver(engine, wf)
+    driver = WorkflowDriver(server, wf)
     return driver.run_react() if workflow == "react" \
         else driver.run_mapreduce()
 

@@ -4,9 +4,12 @@ ForkKV engine and compare the three cache-sharing policies (paper Fig. 11).
 Run:  PYTHONPATH=src python examples/multi_agent_serving.py [--fast]
 """
 import argparse
+import os
 import sys
 
-sys.path.insert(0, "benchmarks")
+# repo root on the path so ``benchmarks.common`` resolves no matter where
+# the script is launched from
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import run_workflow   # noqa: E402
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.core.config import LoRAConfig, ModelConfig, ServeConfig
 from repro.core.disagg import memory_ratio
 from repro.models import transformer as tfm
-from repro.serving.engine import Engine, Request
+from repro.serving.api import ForkServer, SamplingParams
 
 cfg = ModelConfig(name="demo", family="dense", num_layers=2, d_model=128,
                   num_heads=8, num_kv_heads=4, d_ff=256, vocab_size=512,
@@ -38,18 +38,17 @@ for n in (4, 16, 64):
 # --- 3: serve two agents over one shared context --------------------------
 sc = ServeConfig(page_size=16, max_pages=128, max_batch=4,
                  max_prefill_tokens=64, mode="forkkv", max_pages_per_req=8)
-engine = Engine(cfg, params, lora, sc)
+server = ForkServer(cfg, params, lora, sc)
 shared = [int(t) for t in jax.random.randint(jax.random.PRNGKey(3), (48,),
                                              0, 512)]
-for agent in (0, 1):
-    req = Request(rid=agent, adapter_id=agent, prompt=list(shared),
-                  max_new_tokens=8)
-    engine.submit(req)
-    while req.state != "done":
-        engine.step()
-    print(f"agent {agent}: generated {req.output[:8]}")
+# one session prefills + pins the shared context; each agent is a fork
+with server.session(shared) as session:
+    for agent in (0, 1):
+        handle = session.fork(agent, [agent],
+                              SamplingParams(max_new_tokens=8))
+        print(f"agent {agent}: generated {handle.result().tokens}")
 
-m = engine.metrics()
+m = server.metrics()
 print(f"fork kinds: {m['hit_kinds']}  (agent 1 inherited agent 0's bCache)")
 print(f"bCache hit rate: {m['hit_rate']:.2f}, "
       f"peak base pages: {m['peak_base_pages']}, "

@@ -1,0 +1,85 @@
+"""ReAct agent TREE via explicit fork() handles (DESIGN.md §11).
+
+Demonstrates the session-centric serving API end-to-end:
+
+  1. ``server.session(project_context)`` prefills a shared "project"
+     context ONCE and pins it — the whole agent tree below inherits it
+     copy-on-write, and no memory pressure can evict it mid-run.
+  2. A *planner* agent forks the context and streams its plan token by
+     token (``handle.stream()`` — tokens arrive as decode steps produce
+     them, before the request completes).
+  3. Each "plan step" spawns a *worker* subtree: a researcher fork plus a
+     critic fork per worker, each with its own LoRA adapter and sampling
+     policy, run concurrently through one ``server.poll()`` pump.
+  4. A *synthesizer* agent forks once more over everything the tree
+     produced (the ReAct observation chain).
+
+Run:  PYTHONPATH=src python examples/react_agent_tree.py \
+          [--mode forkkv|prefix|full_reuse] [--temperature 0.7]
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import build_server              # noqa: E402
+from repro.serving.api import SamplingParams             # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--mode", default="forkkv",
+                choices=["forkkv", "prefix", "full_reuse"])
+ap.add_argument("--temperature", type=float, default=0.0)
+ap.add_argument("--context", type=int, default=192)
+ap.add_argument("--workers", type=int, default=2)
+args = ap.parse_args()
+
+server, cfg = build_server(args.mode, max_pages=256, max_batch=8,
+                           n_adapters=16, max_pages_per_req=24)
+rng = np.random.default_rng(0)
+project = list(rng.integers(0, cfg.vocab_size, size=args.context))
+greedy = SamplingParams(max_new_tokens=8)
+creative = SamplingParams(temperature=args.temperature or 0.0,
+                          top_k=50, seed=7, max_new_tokens=8)
+
+with server.session(project) as session:
+    # --- planner: stream the plan as it decodes ---------------------------
+    print(f"[{args.mode}] planner streaming:", end=" ", flush=True)
+    planner = session.fork(0, rng.integers(0, cfg.vocab_size, 16).tolist(),
+                           creative)
+    plan = []
+    for ev in planner.stream():
+        if ev.finished:
+            print(f" <{ev.finish_reason}>")
+        else:
+            plan.append(ev.token)
+            print(ev.token, end=" ", flush=True)
+
+    # --- worker subtrees: researcher + critic per plan step ---------------
+    observations = []
+    handles = []
+    for w in range(args.workers):
+        instr = plan + rng.integers(0, cfg.vocab_size, 8).tolist()
+        handles.append(("researcher", w,
+                        session.fork(1 + 2 * w, instr, greedy)))
+        handles.append(("critic", w,
+                        session.fork(2 + 2 * w, instr, creative)))
+    for role, w, h in handles:
+        out = h.result()
+        observations += out.tokens
+        print(f"  {role}[{w}] adapter={h.adapter_id}: {len(out.tokens)} "
+              f"tokens, reason={out.finish_reason}, "
+              f"prefill_share={out.metrics['prefill_share']:.0f}")
+
+    # --- synthesizer over the whole tree's observations -------------------
+    final = session.fork(15, observations[:64], greedy).result()
+    print(f"  synthesizer: {final.tokens}")
+
+m = server.metrics()
+print(f"summary mode={m['mode']} tasks={m['tasks_done']} "
+      f"hit_rate={m['hit_rate']:.2f} hit_kinds={m.get('hit_kinds')} "
+      f"peak_base_pages={m['peak_base_pages']} "
+      f"prefill_saved={m['prefill_saved_frac']:.2f} "
+      f"events={m['events_dispatched']}")

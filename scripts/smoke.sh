@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Smoke check: tier-1 test suite + one tiny tiered-engine workflow
-# end-to-end (HBM→host demotion under pressure, DESIGN.md §10).
+# end-to-end (HBM→host demotion under pressure, DESIGN.md §10) + the
+# session/fork API example in all three cache-sharing modes (§11).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -14,7 +15,7 @@ import jax
 from repro.configs.paper_models import tiny_serving_model
 from repro.core.config import ServeConfig
 from repro.models import transformer as tfm
-from repro.serving.engine import Engine
+from repro.serving.api import ForkServer
 from repro.serving.workflows import WorkflowConfig, WorkflowDriver
 
 cfg = tiny_serving_model(rank=8)
@@ -23,18 +24,24 @@ lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=8)
 sc = ServeConfig(page_size=16, max_pages=26, max_batch=4,
                  max_prefill_tokens=64, mode="forkkv",
                  max_pages_per_req=24, host_tier_bytes=64 << 20)
-eng = Engine(cfg, params, lora, sc)
+server = ForkServer(cfg, params, lora, sc)
 wf = WorkflowConfig(n_workflows=3, agents_per_workflow=2, rounds=2,
                     shared_context_len=256, instr_len=16, tool_obs_len=24,
                     max_new_tokens=4, vocab=cfg.vocab_size, seed=0)
-rep = WorkflowDriver(eng, wf).run_react()
+rep = WorkflowDriver(server, wf).run_react()
 assert rep["tasks_done"] == 12, rep["tasks_done"]
 assert rep["demoted_pages"] > 0, "expected demotions under pressure"
 assert rep["tier_hits"] > 0, "expected host-tier promotions"
+eng = server.engine
 assert eng.base_pool.free_pages + eng.base_pool.used_pages == 26
 print(f"tiered e2e OK: tasks={rep['tasks_done']} "
       f"tier_hits={rep['tier_hits']} demoted={rep['demoted_pages']} "
       f"promoted_bytes={rep['promoted_bytes']} "
       f"prefill_saved={rep['prefill_saved_frac']:.3f}")
 PY
+
+echo "== session/fork API example, all three modes =="
+for mode in forkkv prefix full_reuse; do
+  python examples/react_agent_tree.py --mode "$mode" --temperature 0.8
+done
 echo "smoke OK"

@@ -233,3 +233,8 @@ class ServeConfig:
     # policy knob: max pages promoted host→device per prefix match
     # (0 = unlimited) — bounds the H2D copy burst a single admission pays.
     tier_promote_limit: int = 0
+    # stall detection: after this many consecutive engine steps with work
+    # waiting but nothing admitted, prefilled, or decoded, the head waiting
+    # request is failed with a ``stalled`` error instead of the engine
+    # silently spinning until the caller's step budget runs out.
+    stall_limit: int = 64

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --mode forkkv \
       --workflow react --workflows 2 --agents 3
+
+Runs entirely through the session/fork API (``repro.serving.api``): the
+launcher builds a :class:`ForkServer`, the workflow driver pins the shared
+context in an :class:`AgentSession` and forks agents off it.
 """
 from __future__ import annotations
 
@@ -13,14 +17,17 @@ import jax
 from repro.configs.paper_models import tiny_serving_model
 from repro.core.config import ServeConfig
 from repro.models import transformer as tfm
-from repro.serving.engine import Engine
+from repro.serving.api import ForkServer
+from repro.serving.sampling import SamplingParams
 from repro.serving.workflows import WorkflowConfig, WorkflowDriver
 
 
-def build_engine(mode: str, *, rank: int = 8, max_pages: int = 512,
+def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  max_batch: int = 8, n_adapters: int = 32,
                  max_pages_per_req: int = 24, seed: int = 0,
-                 host_tier_bytes: int = 0, tier_promote_limit: int = 0):
+                 host_tier_bytes: int = 0, tier_promote_limit: int = 0,
+                 broadcast_fork: bool = False,
+                 adaptive_fallback: bool = False):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -29,8 +36,16 @@ def build_engine(mode: str, *, rank: int = 8, max_pages: int = 512,
                      max_prefill_tokens=128, mode=mode,
                      max_pages_per_req=max_pages_per_req,
                      host_tier_bytes=host_tier_bytes,
-                     tier_promote_limit=tier_promote_limit)
-    return Engine(cfg, params, lora, sc), cfg
+                     tier_promote_limit=tier_promote_limit,
+                     broadcast_fork=broadcast_fork,
+                     adaptive_fallback=adaptive_fallback)
+    return ForkServer(cfg, params, lora, sc), cfg
+
+
+def build_engine(mode: str, **kw):
+    """Back-compat shim: returns the wrapped Engine."""
+    server, cfg = build_server(mode, **kw)
+    return server.engine, cfg
 
 
 def main() -> None:
@@ -44,6 +59,20 @@ def main() -> None:
     ap.add_argument("--context", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-pages", type=int, default=512)
+    ap.add_argument("--broadcast-fork", action="store_true",
+                    help="amortize identical simultaneous prefills into one "
+                         "base-trajectory pass (DESIGN.md §9)")
+    ap.add_argument("--adaptive-fallback", action="store_true",
+                    help="enable the adaptive unified-cache fallback knob "
+                         "(ServeConfig.adaptive_fallback)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling cutoff (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed")
     ap.add_argument("--host-tier-mb", type=int, default=0,
                     help="host KV offload budget in MiB (0 = disabled, "
                          "DESIGN.md §10)")
@@ -53,15 +82,21 @@ def main() -> None:
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
-    engine, cfg = build_engine(
+    server, cfg = build_server(
         args.mode, max_pages=args.max_pages,
         host_tier_bytes=args.host_tier_mb << 20,
-        tier_promote_limit=args.tier_promote_limit)
+        tier_promote_limit=args.tier_promote_limit,
+        broadcast_fork=args.broadcast_fork,
+        adaptive_fallback=args.adaptive_fallback)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed, max_new_tokens=args.max_new)
     wf = WorkflowConfig(n_workflows=args.workflows,
                         agents_per_workflow=args.agents,
                         shared_context_len=args.context,
-                        max_new_tokens=args.max_new, vocab=cfg.vocab_size)
-    driver = WorkflowDriver(engine, wf)
+                        max_new_tokens=args.max_new, vocab=cfg.vocab_size,
+                        sampling=sampling)
+    driver = WorkflowDriver(server, wf)
     rep = driver.run_react() if args.workflow == "react" \
         else driver.run_mapreduce()
     if args.json:

@@ -18,6 +18,10 @@ With ``ServeConfig.host_tier_bytes > 0`` both device pools are wrapped in
 demotes unlocked leaves to a numpy-backed host tier instead of destroying
 them, and prefix matching during admission promotes tier-hit pages back
 into free device pages — turning the seed's eviction cliff into a copy.
+
+Clients should not drive this class directly: the session/fork API
+(:mod:`repro.serving.api`, DESIGN.md §11) wraps it with ``AgentSession``
+context pinning, streaming ``GenerationHandle`` s and the ``poll()`` pump.
 """
 from __future__ import annotations
 
@@ -31,6 +35,7 @@ from repro.core.config import ModelConfig, ServeConfig
 from repro.serving.executor import PagedExecutor, pool_bytes
 from repro.serving.pool import PagePool
 from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
+from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.tiers import HostTier, TieredPagePool
 
 
@@ -41,6 +46,11 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     arrival: float = 0.0
+    # token-selection policy; None -> greedy argmax (the seed behaviour)
+    sampling: Optional[SamplingParams] = None
+    # context-only request (AgentSession prefill): generates nothing, its
+    # product is the cache; excluded from tasks_done
+    is_context: bool = False
     # runtime state
     state: str = "waiting"        # waiting | prefill | decode | done
     output: List[int] = dataclasses.field(default_factory=list)
@@ -54,7 +64,17 @@ class Request:
     fork: Optional[Any] = dataclasses.field(default=None)
     finished_at: float = 0.0
     prefilled_tokens: int = 0     # tokens this request actually computed
-    error: str = ""               # non-empty when rejected at admission
+                                  # (exact int; broadcast attributes the
+                                  # shared pass to its writer)
+    prefill_share: float = 0.0    # amortized share of prefill compute —
+                                  # broadcast splits the pass across the
+                                  # group; feeds metrics()
+    finish_reason: str = ""       # stop | length | rejected | stalled
+    error: str = ""               # non-empty when rejected/stalled
+
+    @property
+    def params(self) -> SamplingParams:
+        return self.sampling if self.sampling is not None else GREEDY
 
 
 class Engine:
@@ -118,6 +138,8 @@ class Engine:
         self.decode_batch_hist: List[int] = []
         self.preemptions = 0          # demote-under-pressure events
         self.rejected = 0             # requests refused at admission
+        self.stalled = 0              # requests failed by stall detection
+        self._no_progress = 0         # consecutive zero-progress steps
         self.peak_base_pages = 0
         self.peak_res_pages = 0
         self.agent_ids_seen = set()
@@ -162,6 +184,30 @@ class Engine:
             self.tree.unlock_path(path)
         req.fork = None
 
+    # ------------------------------------------------------- session pins
+    def pin_prefix(self, tokens: Sequence[int], adapter_id: int = 0):
+        """Pin the cached prefix of ``tokens`` against eviction for a
+        session's lifetime (DESIGN.md §11).  Distinct from the transient
+        per-request locks taken during admission: a pin outlives any one
+        request and is released only by :meth:`unpin`.  Returns an opaque
+        handle."""
+        if self.mode == "forkkv":
+            return ("forkkv", adapter_id,
+                    self.dual.pin(tokens, adapter_id))
+        if self.mode == "prefix":
+            return ("prefix", adapter_id,
+                    self.forest.pin(adapter_id, tokens))
+        return ("full_reuse", adapter_id, self.tree.pin(tokens))
+
+    def unpin(self, handle) -> None:
+        mode, adapter_id, inner = handle
+        if mode == "forkkv":
+            self.dual.unpin(inner, adapter_id)
+        elif mode == "prefix":
+            self.forest.unpin(adapter_id, inner[0])
+        else:
+            self.tree.unpin(inner[0])
+
     def _evict(self, pool: PagePool, n: int) -> int:
         tiered = getattr(pool, "is_tiered", False)
         before = pool.demoted_pages if tiered else 0
@@ -195,6 +241,7 @@ class Engine:
         n_pages = -(-total_len // page)
         if n_pages > self.max_pages_per_req:
             req.state = "done"
+            req.finish_reason = "rejected"
             req.error = (f"rejected: request {req.rid} too long "
                          f"({total_len} tokens > "
                          f"{self.max_pages_per_req * page})")
@@ -260,17 +307,28 @@ class Engine:
         else:
             wr = [self.dump_r] * n
         chunk_size = self.sc.max_prefill_tokens
+        sp = req.params
         next_tok, _ = self.executor.prefill_chunk(
             chunk_tokens, start, req.adapter_id, bt_b, bt_r, wb, wr,
-            chunk_size)
+            chunk_size, temp=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
+            seed=sp.seed, spos=len(req.output))
         req.prefill_pos = end
         req.kv_len = end
         req.prefilled_tokens += n
+        req.prefill_share += n
         if end >= len(req.prompt):
+            if req.max_new_tokens == 0:
+                # context-only request (session prefill): the cache is the
+                # product — commit it and finish without generating
+                self._finish(req, reason="length")
+                return
             req.state = "decode"
-            req.output.append(int(next_tok))
+            tok = int(next_tok)
+            req.output.append(tok)
             # the sampled token's KV is not cached yet; it will be written
             # when the decode step consumes it
+            if tok in sp.stop_token_ids:
+                self._finish(req, reason="stop")
 
     def _bt(self, pages: Sequence[int]) -> List[int]:
         bt = list(pages)[:self.max_pages_per_req]
@@ -278,17 +336,18 @@ class Engine:
         return bt + [dump] * (self.max_pages_per_req - len(bt))
 
     # ------------------------------------------------------------- decode
-    def _decode_all(self) -> None:
+    def _decode_all(self) -> bool:
         batch = [r for r in self.running if r.state == "decode"
                  and len(r.output) < r.max_new_tokens + 1]
         batch = batch[:self.sc.max_batch]
         if not batch:
-            return
+            return False
         self.decode_batch_hist.append(len(batch))
         bsz = len(batch)
         page = self.sc.page_size
         toks, kvl, ids, btb, btr, wpb, wpr, woff = [], [], [], [], [], [], \
             [], []
+        temps, tks, tps, seeds, spos = [], [], [], [], []
         for r in batch:
             last = r.output[-1] if r.output else r.prompt[-1]
             toks.append(last)
@@ -301,6 +360,12 @@ class Engine:
             wpr.append(self._write_page_for(r, r.kv_len, "res")
                        if self.mode == "forkkv" else self.dump_r)
             woff.append(r.kv_len % page)
+            sp = r.params
+            temps.append(sp.temperature)
+            tks.append(sp.top_k)
+            tps.append(sp.top_p)
+            seeds.append(sp.seed)
+            spos.append(len(r.output))
         # pad to max_batch for stable jit shapes
         pad = self.sc.max_batch - bsz
         toks += [0] * pad
@@ -311,18 +376,30 @@ class Engine:
         wpb += [self.dump_b] * pad
         wpr += [self.dump_r] * pad
         woff += [0] * pad
+        temps += [0.0] * pad
+        tks += [0] * pad
+        tps += [1.0] * pad
+        seeds += [0] * pad
+        spos += [0] * pad
         next_toks, _ = self.executor.decode(toks, kvl, ids, btb, btr, wpb,
-                                            wpr, woff)
+                                            wpr, woff, temps=temps,
+                                            top_ks=tks, top_ps=tps,
+                                            seeds=seeds, spos=spos)
         for i, r in enumerate(batch):
             r.kv_len += 1
-            r.output.append(int(next_toks[i]))
-            if len(r.output) >= r.max_new_tokens + 1 or \
+            tok = int(next_toks[i])
+            r.output.append(tok)
+            if tok in r.params.stop_token_ids:
+                self._finish(r, reason="stop")
+            elif len(r.output) >= r.max_new_tokens + 1 or \
                     r.kv_len + 1 >= self.max_pages_per_req * page:
-                self._finish(r)
+                self._finish(r, reason="length")
+        return True
 
     # ------------------------------------------------------------- finish
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, reason: str = "length") -> None:
         req.state = "done"
+        req.finish_reason = req.finish_reason or reason
         req.finished_at = time.time()
         full_seq = req.prompt + req.output[:-1]
         cached_len = req.kv_len
@@ -359,6 +436,12 @@ class Engine:
             end = min(len(r.prompt),
                       r.prefill_pos + self.sc.max_prefill_tokens)
             end = (end // page) * page
+            if end >= len(r.prompt):
+                # leave the final tokens to an ordinary per-request prefill:
+                # the broadcast pass emits no logits, so the request's first
+                # output token must come from a real chunk ending at the
+                # prompt's last token — not from an empty follow-up chunk
+                end -= page
             if end <= r.prefill_pos:
                 continue
             key = (r.prefill_pos, tuple(r.prompt[r.prefill_pos:end]))
@@ -396,12 +479,17 @@ class Engine:
         for r in group:
             r.prefill_pos = end
             r.kv_len = end
-            r.prefilled_tokens += len(chunk) / len(group)  # amortized
+            # amortized share for metrics; the EXACT int counter attributes
+            # the single shared pass to its writer (keeps the counter an
+            # int — the seed float-crept it via len(chunk)/len(group))
+            r.prefill_share += len(chunk) / len(group)
+        writer.prefilled_tokens += len(chunk)
         return True
 
     # --------------------------------------------------------------- step
     def step(self) -> None:
         self.steps += 1
+        progress = False
         # admit
         while self.waiting and len(self.running) < self.sc.max_batch:
             req = self.waiting[0]
@@ -410,18 +498,47 @@ class Engine:
                 self.waiting.pop(0)       # the engine alive for the rest
                 self.done.append(req)
                 self.rejected += 1
+                progress = True
                 continue
             if not admitted:
                 break
             self.waiting.pop(0)
             self.running.append(req)
+            progress = True
+            if req.state == "decode" and req.max_new_tokens == 0:
+                # fully-cached context-only request: nothing to compute
+                self._finish(req, reason="length")
         # one chunked prefill per step (broadcast if several agents share it)
-        if not self._try_broadcast():
+        if self._try_broadcast():
+            progress = True
+        else:
             for r in self.running:
                 if r.state == "prefill":
                     self._prefill_one(r)
+                    progress = True
                     break
-        self._decode_all()
+        if self._decode_all():
+            progress = True
+        # stall detection: waiting work + nothing admitted/prefilled/decoded
+        # for stall_limit consecutive steps -> fail the head request loudly
+        # instead of silently burning the caller's step budget
+        if self.waiting and not progress:
+            self._no_progress += 1
+            if self._no_progress >= self.sc.stall_limit:
+                head = self.waiting.pop(0)
+                head.state = "done"
+                head.finish_reason = "stalled"
+                head.error = (
+                    f"stalled: request {head.rid} made no progress for "
+                    f"{self._no_progress} steps (pool too small or cache "
+                    f"pinned beyond its needs: {self.base_pool.free_pages} "
+                    f"base pages free)")
+                head.finished_at = time.time()
+                self.done.append(head)
+                self.stalled += 1
+                self._no_progress = 0
+        else:
+            self._no_progress = 0
         self.peak_base_pages = max(self.peak_base_pages,
                                    self.base_pool.used_pages)
         self.peak_res_pages = max(self.peak_res_pages,
@@ -461,7 +578,9 @@ class Engine:
             hit = self.tree.hits_tokens
             miss = self.tree.miss_tokens
             evicted = self.tree.evicted_pages
-        prefilled = sum(r.prefilled_tokens for r in self.done)
+        # amortized shares (broadcast splits its one pass across the group);
+        # the exact per-request int lives in Request.prefilled_tokens
+        prefilled = sum(r.prefill_share for r in self.done)
         prompt_tokens = sum(len(r.prompt) for r in self.done
                             if not r.error)
         tier = {"tier_hits": 0, "demoted_pages": 0, "demoted_bytes": 0,
@@ -479,7 +598,8 @@ class Engine:
         return {
             **tier,
             "mode": self.mode,
-            "tasks_done": len(self.done),
+            "tasks_done": len([r for r in self.done if not r.is_context]),
+            "context_prefills": len([r for r in self.done if r.is_context]),
             "steps": self.steps,
             "avg_decode_batch": (sum(self.decode_batch_hist) /
                                  max(1, len(self.decode_batch_hist))),
@@ -497,4 +617,5 @@ class Engine:
             "evicted_pages": evicted,
             "preemptions": self.preemptions,
             "rejected": self.rejected,
+            "stalled": self.stalled,
         }

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.config import ModelConfig, ServeConfig
 from repro.models import base
 from repro.models import transformer as tfm
+from repro.serving.sampling import sample_tokens
 
 Params = Dict
 
@@ -74,9 +75,13 @@ class PagedExecutor:
         self.pools = make_pools(cfg, serve_cfg.max_pages,
                                 self.num_res_pages, self.page, self.disagg)
         self.dump_page = serve_cfg.max_pages - 1   # reserved scratch page
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
+        # ``sampled`` is static: all-greedy batches (the default) compile
+        # the seed's pure-argmax body with the sampling math dead-code
+        # eliminated; a second variant exists only once sampling is used
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,),
+                               static_argnames=("sampled",))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(0,),
-                                static_argnames=("chunk",))
+                                static_argnames=("chunk", "sampled"))
 
     # ------------------------------------------------ tiered KV offload
     def export_pages(self, kind: str,
@@ -179,12 +184,16 @@ class PagedExecutor:
 
     # ------------------------------------------------------------- decode
     def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
-                   bt_r, wpage_b, wpage_r, woff):
+                   bt_r, wpage_b, wpage_r, woff, temps, top_ks, top_ps,
+                   seeds, spos, *, sampled):
         """One decode step for a padded batch.
 
         tokens/kv_len/adapter_ids: (B,); bt_*: (B, maxpages) block tables;
         wpage_*: (B,) page indices to write the new token's KV into
-        (dump page for inactive rows); woff: (B,) in-page offsets.
+        (dump page for inactive rows); woff: (B,) in-page offsets;
+        temps/top_ks/top_ps/seeds/spos: (B,) per-row sampling params
+        (temp <= 0 -> greedy argmax, the seed's exact path); sampled:
+        static — False compiles the argmax-only body.
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
@@ -231,29 +240,47 @@ class PagedExecutor:
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
         logits = tfm.unembed(self.params, x, cfg)[:, 0]
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sampled:
+            next_tok = sample_tokens(logits, temps, top_ks, top_ps, seeds,
+                                     spos)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return new_pools, next_tok, logits
 
     def decode(self, tokens, kv_len, adapter_ids, bt_b, bt_r, wpage_b,
-               wpage_r, woff):
+               wpage_r, woff, temps=None, top_ks=None, top_ps=None,
+               seeds=None, spos=None):
+        bsz = len(tokens)
+        temps = [0.0] * bsz if temps is None else temps
+        top_ks = [0] * bsz if top_ks is None else top_ks
+        top_ps = [1.0] * bsz if top_ps is None else top_ps
+        seeds = [0] * bsz if seeds is None else seeds
+        spos = [0] * bsz if spos is None else spos
         self.pools, next_tok, logits = self._decode(
             self.pools, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(kv_len, jnp.int32),
             jnp.asarray(adapter_ids, jnp.int32),
             jnp.asarray(bt_b, jnp.int32), jnp.asarray(bt_r, jnp.int32),
             jnp.asarray(wpage_b, jnp.int32), jnp.asarray(wpage_r, jnp.int32),
-            jnp.asarray(woff, jnp.int32))
+            jnp.asarray(woff, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
+            jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(spos, jnp.int32),
+            sampled=any(t > 0 for t in temps))
         return next_tok, logits
 
     # ------------------------------------------------------------ prefill
     def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_id,
-                    bt_b, bt_r, wpages_b, wpages_r, *, chunk):
+                    bt_b, bt_r, wpages_b, wpages_r, temp, top_k, top_p,
+                    seed, spos, *, chunk, sampled):
         """Chunked prefill for ONE request.
 
         tokens: (chunk,) padded; start: scalar absolute position of
         tokens[0]; n_valid: scalar #real tokens; wpages_*: (chunk,) page to
         write each token into (dump page where the cache is inherited —
-        CoW: shared pages are never written).
+        CoW: shared pages are never written); temp/top_k/top_p/seed/spos:
+        scalar sampling params for the first generated token (sampled:
+        static — False compiles the argmax-only body).
         """
         cfg = self.cfg
         positions = start + jnp.arange(chunk)
@@ -300,7 +327,11 @@ class PagedExecutor:
         # logits of the LAST VALID token
         idx = jnp.maximum(n_valid - 1, 0)
         logits = tfm.unembed(self.params, x[:, idx][:, None], cfg)[0, 0]
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sampled:
+            next_tok = sample_tokens(logits[None], temp[None], top_k[None],
+                                     top_p[None], seed[None], spos[None])[0]
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return new_pools, next_tok, logits
 
     # ------------------------------------------------- broadcast fork
@@ -384,7 +415,8 @@ class PagedExecutor:
             chunk=chunk_size, n_agents=len(adapter_ids))
 
     def prefill_chunk(self, tokens, start, adapter_id, bt_b, bt_r,
-                      wpages_b, wpages_r, chunk_size):
+                      wpages_b, wpages_r, chunk_size, temp=0.0, top_k=0,
+                      top_p=1.0, seed=0, spos=0):
         n = len(tokens)
         pad = chunk_size - n
         toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
@@ -394,5 +426,8 @@ class PagedExecutor:
             self.pools, toks, jnp.asarray(start, jnp.int32),
             jnp.asarray(n, jnp.int32), jnp.asarray(adapter_id, jnp.int32),
             jnp.asarray(bt_b, jnp.int32), jnp.asarray(bt_r, jnp.int32),
-            wb, wr, chunk=chunk_size)
+            wb, wr, jnp.asarray(temp, jnp.float32),
+            jnp.asarray(top_k, jnp.int32), jnp.asarray(top_p, jnp.float32),
+            jnp.asarray(seed, jnp.int32), jnp.asarray(spos, jnp.int32),
+            chunk=chunk_size, sampled=temp > 0)
         return int(next_tok), logits

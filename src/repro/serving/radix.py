@@ -37,9 +37,22 @@ from repro.serving.pool import PagePool
 _counter = itertools.count()
 
 
+def _adjust_chain(node: Optional["Node"], attr: str, delta: int) -> None:
+    """Adjust a reference counter (``lock_ref``/``pin_ref``) along the
+    CURRENT parent chain from ``node`` to the root.  The shared walk for
+    lock release and pin take/release: counters cover the whole path and
+    survive splits (the head copies them), so correctness depends on
+    walking parents as they are NOW, not as they were recorded."""
+    while node is not None:
+        value = getattr(node, attr) + delta
+        assert value >= 0, (attr, value)
+        setattr(node, attr, value)
+        node = node.parent
+
+
 class Node:
     __slots__ = ("key", "pages", "children", "parent", "last_access",
-                 "lock_ref", "tier")
+                 "lock_ref", "pin_ref", "tier")
 
     def __init__(self, key: Tuple[int, ...], pages: List[int],
                  parent: Optional["Node"]):
@@ -49,7 +62,10 @@ class Node:
         self.children: Dict[int, Node] = {}
         self.parent = parent
         self.last_access = next(_counter)
-        self.lock_ref = 0
+        self.lock_ref = 0               # transient: held per in-flight request
+        self.pin_ref = 0                # long-lived: held per AgentSession
+                                        # (DESIGN.md §11) — blocks eviction
+                                        # AND demotion for the session's life
         self.tier = "device"            # device | host
 
 
@@ -154,6 +170,7 @@ class RadixTree:
         head = Node(child.key[:keep], child.pages[:kp], child.parent)
         head.last_access = child.last_access
         head.lock_ref = child.lock_ref       # locks cover the whole path
+        head.pin_ref = child.pin_ref         # ...and so do session pins
         head.tier = child.tier
         if head.tier == "host" and getattr(self.pool, "is_tiered", False):
             self.pool.retarget(head.pages, head)   # handles moved to head
@@ -174,13 +191,31 @@ class RadixTree:
         lock per locker, so one decrement each settles the account (and
         with tiers, leaves nothing permanently pinned against eviction).
         """
-        if not path:
-            return
-        node = path[-1]
-        while node is not None:
-            node.lock_ref -= 1
-            assert node.lock_ref >= 0
-            node = node.parent
+        if path:
+            _adjust_chain(path[-1], "lock_ref", -1)
+
+    # ------------------------------------------------------------- pinning
+    def pin(self, tokens: Sequence[int]) -> Tuple[List[Node], int]:
+        """Pin the cached prefix of ``tokens`` against eviction/demotion.
+
+        Session-lifetime locks (DESIGN.md §11), DISTINCT from the transient
+        per-request ``lock_ref`` a match takes: a pin survives arbitrarily
+        many requests and is only dropped by :meth:`unpin` (session close).
+        Returns ``(path, matched_tokens)``; the caller keeps the path as
+        its unpin handle.  Host-tier nodes on the path are promoted first
+        (a pinned prefix is always device-resident).
+        """
+        _, matched, path = self.match_prefix(tokens)
+        # pins cover the whole path, same convention as locks
+        _adjust_chain(path[-1], "pin_ref", +1)
+        return path, matched
+
+    def unpin(self, path: List[Node]) -> None:
+        """Release a session pin.  Walks the CURRENT parent chain from the
+        deepest pinned node (splits copy ``pin_ref`` onto new heads exactly
+        as they copy ``lock_ref`` — see :meth:`unlock_path`)."""
+        if path:
+            _adjust_chain(path[-1], "pin_ref", -1)
 
     # ----------------------------------------------------------- insertion
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
@@ -245,7 +280,8 @@ class RadixTree:
         skipped = set()
         while freed < n_pages:
             leaves = [l for l in self._leaves()
-                      if l.lock_ref == 0 and id(l) not in skipped]
+                      if l.lock_ref == 0 and l.pin_ref == 0
+                      and id(l) not in skipped]
             if not leaves:
                 break
             victim = min(leaves, key=lambda n: n.last_access)
@@ -350,6 +386,12 @@ class ResidualForest:
     def insert(self, adapter_id: int, tokens, pages) -> int:
         return self.tree(adapter_id).insert(tokens, pages)
 
+    def pin(self, adapter_id: int, tokens) -> Tuple[List[Node], int]:
+        return self.tree(adapter_id).pin(tokens)
+
+    def unpin(self, adapter_id: int, path: List[Node]) -> None:
+        self.tree(adapter_id).unpin(path)
+
     def evict(self, n_pages: int) -> int:
         """Global LRU across namespaces; demotes before destroying (tiered
         pools), exactly as :meth:`RadixTree.evict`."""
@@ -359,7 +401,8 @@ class ResidualForest:
             candidates = []
             for t in self.trees.values():
                 candidates.extend(l for l in t._leaves()
-                                  if l.lock_ref == 0 and id(l) not in skipped)
+                                  if l.lock_ref == 0 and l.pin_ref == 0
+                                  and id(l) not in skipped)
             if not candidates:
                 break
             victim = min(candidates, key=lambda n: n.last_access)
@@ -415,6 +458,18 @@ class DualRadixTree:
         """After generation: publish this agent's caches into both trees."""
         self.base.insert(tokens, base_pages)
         self.residual.insert(adapter_id, tokens, res_pages)
+
+    def pin(self, tokens: Sequence[int], adapter_id: int):
+        """Session pin over BOTH trees: the shared bCache prefix plus the
+        session adapter's rCache prefix (DESIGN.md §11)."""
+        b_path, b_len = self.base.pin(tokens)
+        r_path, r_len = self.residual.pin(adapter_id, tokens)
+        return (b_path, r_path, min(b_len, r_len))
+
+    def unpin(self, handle, adapter_id: int) -> None:
+        b_path, r_path, _ = handle
+        self.base.unpin(b_path)
+        self.residual.unpin(adapter_id, r_path)
 
     def release(self, fr: ForkResult, adapter_id: int) -> None:
         if fr.base_path is not None:

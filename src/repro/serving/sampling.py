@@ -1,0 +1,115 @@
+"""Sampling parameters + the jit-stable categorical sampling path.
+
+The seed executor hard-coded ``argmax`` inside the compiled decode/prefill
+functions.  This module factors token selection out into one function,
+:func:`sample_tokens`, that runs INSIDE the jitted executor bodies with
+fixed shapes:
+
+  * greedy rows (``temperature <= 0``) take ``argmax`` over the RAW logits
+    — bit-for-bit identical to the seed's behaviour, so greedy
+    :class:`SamplingParams` reproduce the old outputs exactly;
+  * sampled rows apply temperature, then top-k, then top-p masking, and
+    draw from ``jax.random.categorical``.  Randomness is derived per row
+    from ``fold_in(PRNGKey(seed), position)`` — fully deterministic given
+    (seed, #tokens generated so far) and independent of batch composition,
+    so a request's stream never changes because another request joined the
+    decode batch.
+
+Everything is branch-free over traced values (``jnp.where`` masks, gather
+with dynamic indices), so one compiled executor serves every mix of greedy
+and sampled requests in a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request token-selection policy (frozen: safe to share/hash).
+
+    temperature  0.0 (default) = greedy argmax; > 0 = categorical sampling
+    top_k        keep only the k highest logits (0 = disabled)
+    top_p        nucleus sampling: keep the smallest prefix of the sorted
+                 distribution with cumulative probability >= top_p
+                 (1.0 = disabled)
+    seed         PRNG seed for this request's stream (ignored when greedy)
+    max_new_tokens  generation budget
+    stop_token_ids  generation finishes (reason "stop") when one of these
+                 is produced; the stop token itself is not returned
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.max_new_tokens < 0:
+            raise ValueError("max_new_tokens must be >= 0")
+        # tolerate lists from CLI / JSON callers
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(self.stop_token_ids))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
+                  top_ks: jnp.ndarray, top_ps: jnp.ndarray,
+                  seeds: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Select one token per row of ``logits``.  Jit-stable; runs inside the
+    compiled executor bodies.
+
+    logits: (B, V); temps/top_ps: (B,) float; top_ks/seeds/positions: (B,)
+    int32.  ``positions`` is the number of tokens the row's request has
+    generated so far — folded into the key so successive steps draw fresh
+    randomness deterministically.
+    """
+    vocab = logits.shape[-1]
+    greedy = temps <= 0.0
+    # --- temperature (guard greedy rows against /0; their value is unused)
+    scaled = logits.astype(jnp.float32) / \
+        jnp.where(greedy, 1.0, temps)[:, None]
+    # --- top-k: threshold at the k-th largest logit (k dynamic per row)
+    sort_desc = -jnp.sort(-scaled, axis=-1)
+    k = jnp.clip(jnp.where(top_ks <= 0, vocab, top_ks), 1, vocab)
+    kth = jnp.take_along_axis(sort_desc, (k - 1)[:, None].astype(jnp.int32),
+                              axis=-1)
+    masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # --- top-p over the top-k-masked distribution: keep the smallest
+    # prefix of the sorted probs whose EXCLUSIVE cumsum is < top_p (the
+    # most-probable token is always kept)
+    sort_m = -jnp.sort(-masked, axis=-1)
+    probs = jax.nn.softmax(sort_m, axis=-1)      # -inf rows -> prob 0
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_ps[:, None]
+    last = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0).astype(jnp.int32)
+    pth = jnp.take_along_axis(sort_m, last[:, None], axis=-1)
+    masked = jnp.where(masked < pth, -jnp.inf, masked)
+
+    def draw(seed, pos, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seeds, positions, masked)
+    # greedy rows: argmax over RAW logits — the seed's exact path
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1),
+                     sampled).astype(jnp.int32)

@@ -265,9 +265,10 @@ class TieredPagePool:
         return max(0, self.promote_limit - self._match_promoted)
 
     def host_can_evict(self, handle: int) -> bool:
-        """Host LRU guard: entries of locked (in-use) nodes are pinned."""
+        """Host LRU guard: entries of locked (in-use) or session-pinned
+        nodes are untouchable."""
         node = self._node_of.get(handle)
-        return node is None or node.lock_ref == 0
+        return node is None or (node.lock_ref == 0 and node.pin_ref == 0)
 
     def demote_node(self, node) -> bool:
         """Copy a node's device pages to the host tier and free them.
@@ -280,6 +281,10 @@ class TieredPagePool:
         """
         pages = list(node.pages)
         if not pages or self.export_fn is None:
+            return False
+        if node.pin_ref > 0:
+            # session-pinned context: immune to demotion too — a live
+            # session's whole point is keeping its prefix hot on device
             return False
         if any(self.pool.refcount(p) != 1 for p in pages):
             return False
@@ -395,6 +400,7 @@ class TieredPagePool:
         ``host_can_evict`` refuses every entry above it — asserted here
         so a future violation fails loudly instead of double-freeing."""
         assert node.lock_ref == 0, "dropping a locked (in-use) radix node"
+        assert node.pin_ref == 0, "dropping a session-pinned radix node"
         for child in list(node.children.values()):
             self._drop_subtree(child)
         if node.tier == "host":

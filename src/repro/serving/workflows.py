@@ -8,6 +8,12 @@ instructions; a reduce agent consumes their concatenated outputs.
 Tool calls are simulated exactly as in the paper: a constant latency and a
 mock observation of random tokens (synthetic ids here — no tokenizer ships
 offline).
+
+The driver runs entirely on the session/fork API (DESIGN.md §11): one
+:class:`~repro.serving.api.AgentSession` pins the shared static context,
+every agent step is a ``session.fork()``, and the engine is pumped through
+``server.poll()`` — no ``Request`` construction or ``engine.step()`` busy
+loops here.
 """
 from __future__ import annotations
 
@@ -17,7 +23,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.engine import Engine, Request
+from repro.serving.api import AgentSession, ForkServer, GenerationHandle
+from repro.serving.engine import Engine
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -34,16 +42,25 @@ class WorkflowConfig:
     tool_latency_s: float = 0.0       # simulated (recorded, not slept)
     vocab: int = 1024
     seed: int = 0
+    # token-selection policy for every agent; None -> greedy argmax with
+    # this config's max_new_tokens budget
+    sampling: Optional[SamplingParams] = None
 
 
 class WorkflowDriver:
-    """Drives ReAct / MapReduce workflows through an Engine."""
+    """Drives ReAct / MapReduce workflows through a :class:`ForkServer`.
 
-    def __init__(self, engine: Engine, wf: WorkflowConfig):
-        self.engine = engine
+    Accepts a bare :class:`Engine` too (wrapped via ``from_engine``) so
+    engine-level tests and older callers keep working.
+    """
+
+    def __init__(self, server, wf: WorkflowConfig):
+        if isinstance(server, Engine):
+            server = ForkServer.from_engine(server)
+        self.server: ForkServer = server
+        self.engine = server.engine        # metrics convenience
         self.wf = wf
         self.rng = np.random.default_rng(wf.seed)
-        self._rid = 0
         # one shared static context per workflow "project"; workflows within
         # a run share it (the paper's massive static part)
         self.shared = list(self.rng.integers(
@@ -53,24 +70,10 @@ class WorkflowDriver:
     def _tokens(self, n: int) -> List[int]:
         return list(self.rng.integers(0, self.wf.vocab, size=n).astype(int))
 
-    def _request(self, adapter_id: int, context: List[int]) -> Request:
-        self._rid += 1
-        return Request(rid=self._rid, adapter_id=adapter_id,
-                       prompt=list(context),
-                       max_new_tokens=self.wf.max_new_tokens)
-
-    def _run_request(self, req: Request) -> List[int]:
-        self.engine.submit(req)
-        while req.state != "done":
-            self.engine.step()
-        return req.output[:-1]
-
-    def _run_batch(self, reqs: List[Request]) -> List[List[int]]:
-        for r in reqs:
-            self.engine.submit(r)
-        while any(r.state != "done" for r in reqs):
-            self.engine.step()
-        return [r.output[:-1] for r in reqs]
+    def _sampling(self) -> SamplingParams:
+        if self.wf.sampling is not None:
+            return self.wf.sampling
+        return SamplingParams(max_new_tokens=self.wf.max_new_tokens)
 
     # ------------------------------------------------------------- ReAct
     def run_react(self) -> Dict:
@@ -83,35 +86,36 @@ class WorkflowDriver:
         t0 = time.time()
         tasks = 0
         total_steps = wf.agents_per_workflow * wf.rounds
-        state = [{"dynamic": [], "agent": 0, "req": None}
+        session = self.server.session(self.shared)
+        state = [{"dynamic": [], "agent": 0, "handle": None}
                  for _ in range(wf.n_workflows)]
 
         def unfinished():
             return any(s["agent"] < total_steps or
-                       s["req"] is not None for s in state)
+                       s["handle"] is not None for s in state)
 
         while unfinished():
             for w, s in enumerate(state):
-                if s["req"] is None and s["agent"] < total_steps:
+                if s["handle"] is None and s["agent"] < total_steps:
                     # agents cycle across rounds: same adapter re-extends
                     # the same (grown) context -> residual-tree hits
                     adapter = w * wf.agents_per_workflow + \
                         (s["agent"] % wf.agents_per_workflow)
-                    ctx = self.shared + s["dynamic"] + \
-                        self._tokens(wf.instr_len)
-                    s["req"] = self._request(adapter, ctx)
-                    self.engine.submit(s["req"])
-            self.engine.step()
+                    instr = s["dynamic"] + self._tokens(wf.instr_len)
+                    s["handle"] = session.fork(adapter, instr,
+                                               self._sampling())
+            self.server.poll()
             for s in state:
-                r = s["req"]
-                if r is not None and r.state == "done":
-                    out = r.output[:-1]
+                h: Optional[GenerationHandle] = s["handle"]
+                if h is not None and h.done:
+                    out = h.result().tokens
                     s["dynamic"] = s["dynamic"] + out + \
                         self._tokens(wf.tool_obs_len)
                     s["agent"] += 1
-                    s["req"] = None
+                    s["handle"] = None
                     self.tool_time += wf.tool_latency_s
                     tasks += 1
+        session.close()
         wall = time.time() - t0
         return self._report("react", tasks, wall)
 
@@ -121,25 +125,27 @@ class WorkflowDriver:
         wf = self.wf
         t0 = time.time()
         tasks = 0
+        session = self.server.session(self.shared)
         for w in range(wf.n_workflows):
-            reqs = []
+            handles = []
             for a in range(wf.agents_per_workflow):
                 adapter = w * wf.agents_per_workflow + a
-                ctx = self.shared + self._tokens(wf.instr_len)
-                reqs.append(self._request(adapter, ctx))
-            outs = self._run_batch(reqs)
-            tasks += len(reqs)
+                handles.append(session.fork(
+                    adapter, self._tokens(wf.instr_len), self._sampling()))
+            outs = [r.tokens for r in self.server.wait(handles)]
+            tasks += len(handles)
             # reduce step: one agent over concatenated outputs
-            reduce_ctx = self.shared + [t for o in outs for t in o] + \
+            reduce_instr = [t for o in outs for t in o] + \
                 self._tokens(wf.instr_len)
-            self._run_request(self._request(
-                wf.n_workflows * wf.agents_per_workflow + w, reduce_ctx))
+            session.fork(wf.n_workflows * wf.agents_per_workflow + w,
+                         reduce_instr, self._sampling()).result()
             tasks += 1
+        session.close()
         wall = time.time() - t0
         return self._report("mapreduce", tasks, wall)
 
     def _report(self, kind: str, tasks: int, wall: float) -> Dict:
-        m = self.engine.metrics()
+        m = self.server.metrics()
         m.update(workflow=kind, tasks=tasks, wall_s=wall,
                  tool_latency_s=self.tool_time,
                  throughput_tasks_per_s=tasks / max(wall, 1e-9))

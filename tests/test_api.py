@@ -1,0 +1,284 @@
+"""Session/fork serving API tests (DESIGN.md §11).
+
+Covers the public surface — ForkServer / AgentSession / GenerationHandle /
+SamplingParams — plus the engine features it rides on: session pinning,
+incremental streaming, seeded sampling, stop tokens, stall detection,
+broadcast-fork accounting, and cross-policy greedy parity (the paper's
+"negligible quality impact" claim at engine level).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.api import ForkServer, SamplingParams
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=16)
+    return cfg, params, lora
+
+
+def make_server(model, mode="forkkv", max_pages=256, lora=None, **kw):
+    cfg, params, default_lora = model
+    base = dict(page_size=16, max_pages=max_pages, max_batch=4,
+                max_prefill_tokens=64, mode=mode, max_pages_per_req=12)
+    base.update(kw)
+    sc = ServeConfig(**base)
+    return ForkServer(cfg, params, lora or default_lora, sc), cfg
+
+
+def prompt_tokens(cfg, n, seed=0):
+    return list(np.random.default_rng(seed).integers(0, cfg.vocab_size, n))
+
+
+# ------------------------------------------------------------ streaming
+def test_stream_yields_tokens_before_completion(model):
+    """Acceptance: .stream() is incremental — events are observed while
+    the request is still in flight, and the streamed tokens equal the
+    final result exactly."""
+    server, cfg = make_server(model)
+    session = server.session(prompt_tokens(cfg, 64))
+    handle = session.fork(1, [1, 2, 3], SamplingParams(max_new_tokens=8))
+    it = handle.stream()
+    first = next(it)
+    assert not handle.done, "first event must arrive mid-generation"
+    assert first.token is not None and first.index == 0
+    events = [first] + list(it)
+    assert events[-1].finished and events[-1].finish_reason == "length"
+    streamed = [e.token for e in events if not e.finished]
+    assert streamed == handle.result().tokens
+    assert len(streamed) == 8
+    session.close()
+
+
+def test_result_without_stream_and_metrics(model):
+    server, cfg = make_server(model)
+    handle = server.generate(2, prompt_tokens(cfg, 40),
+                             SamplingParams(max_new_tokens=5))
+    out = handle.result()
+    assert out.finish_reason == "length" and out.error == ""
+    assert len(out.tokens) == 5
+    assert out.metrics["prompt_tokens"] == 40
+    assert out.metrics["prefilled_tokens"] == 40
+    assert out.metrics["latency_s"] >= 0
+
+
+# ------------------------------------------------------------- sampling
+def test_greedy_api_matches_direct_model(model):
+    """Acceptance: greedy SamplingParams reproduce the seed's argmax path
+    bit-for-bit — the paged engine output equals dense-cache decoding."""
+    cfg, params, lora = model
+    server, _ = make_server(model)
+    prompt = prompt_tokens(cfg, 48, seed=2)
+    out = server.generate(3, prompt,
+                          SamplingParams(max_new_tokens=6)).result()
+
+    ids = jnp.full((1,), 3, jnp.int32)
+    tokens = jnp.asarray([prompt])
+    cache = tfm.init_cache(cfg, 1, 128, disagg=True, dtype=jnp.float32)
+    lg, cache = tfm.prefill(params, tokens, cache, cfg, lora=lora,
+                            adapter_ids=ids, disagg=True)
+    kv_len = jnp.full((1,), len(prompt), jnp.int32)
+    direct = [int(jnp.argmax(lg[0, 0]))]
+    last = jnp.asarray([direct[-1]])
+    for _ in range(5):
+        lg2, cache = tfm.decode_step(params, last, cache, kv_len, cfg,
+                                     lora=lora, adapter_ids=ids, disagg=True)
+        direct.append(int(jnp.argmax(lg2[0])))
+        last = jnp.asarray([direct[-1]])
+        kv_len = kv_len + 1
+    assert out.tokens == direct
+
+
+def test_sampling_seeded_and_divergent(model):
+    """Same seed -> identical stream; different seeds -> (almost surely)
+    different streams; all tokens stay in-vocab."""
+    server, cfg = make_server(model)
+    prompt = prompt_tokens(cfg, 40, seed=3)
+    outs = {}
+    for seed in (0, 0, 1, 2):
+        sp = SamplingParams(temperature=0.9, top_k=64, top_p=0.95,
+                            seed=seed, max_new_tokens=8)
+        toks = server.generate(1, prompt, sp).result().tokens
+        assert all(0 <= t < cfg.vocab_size for t in toks)
+        outs.setdefault(seed, []).append(toks)
+    assert outs[0][0] == outs[0][1], "same seed must reproduce exactly"
+    assert len({tuple(v[0]) for v in outs.values()}) > 1, \
+        "different seeds should explore different streams"
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-2)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_stop_token_finishes_early(model):
+    """A produced stop token ends generation with reason "stop" and is
+    not included in the returned tokens."""
+    server, cfg = make_server(model)
+    prompt = prompt_tokens(cfg, 40, seed=4)
+    ref = server.generate(1, prompt,
+                          SamplingParams(max_new_tokens=8)).result()
+    assert len(ref.tokens) == 8
+    stop = ref.tokens[3]
+    server2, _ = make_server(model)
+    out = server2.generate(
+        1, prompt, SamplingParams(max_new_tokens=8,
+                                  stop_token_ids=(stop,))).result()
+    assert out.finish_reason == "stop"
+    assert out.tokens == ref.tokens[:3]
+    assert stop not in out.tokens[3:]
+
+
+# ------------------------------------------------------------- sessions
+def test_session_pins_context_against_eviction(model):
+    """The session's context is immune to eviction while live: even an
+    evict-everything sweep must not touch the pinned prefix, and re-forking
+    it stays a cache hit.  After close() it becomes evictable."""
+    server, cfg = make_server(model, max_pages=48)
+    eng = server.engine
+    ctx = prompt_tokens(cfg, 64, seed=5)
+    session = server.session(ctx)
+    # real serving alongside: a foreign request populates + then we sweep
+    server.generate(3, prompt_tokens(cfg, 96, seed=13),
+                    SamplingParams(max_new_tokens=4)).result()
+    eng.dual.base.evict(10_000)          # evict every unpinned leaf
+    eng.dual.residual.evict(10_000)
+    assert eng.metrics()["evicted_pages"] > 0, "sweep must be real"
+    fr = eng.dual.fork(ctx, adapter_id=0, lock=False)
+    assert fr.base_len == 64, "pinned context was evicted"
+    assert fr.res_len == 64, "pinned residual path was evicted"
+    session.close()
+    with pytest.raises(RuntimeError):
+        session.fork(1, [1])
+    # after unpin the context is evictable like any other cache entry
+    freed = eng.dual.base.evict(10_000)
+    assert freed >= 4
+    fr = eng.dual.fork(ctx, adapter_id=0, lock=False)
+    assert fr.base_len == 0
+
+
+def test_session_context_excluded_from_tasks(model):
+    server, cfg = make_server(model)
+    with server.session(prompt_tokens(cfg, 64)) as session:
+        session.fork(1, [5], SamplingParams(max_new_tokens=4)).result()
+    m = server.metrics()
+    assert m["tasks_done"] == 1
+    assert m["context_prefills"] == 1
+    assert m["live_sessions"] == 0
+
+
+def test_fork_inherits_pinned_context(model):
+    """Two forks with different adapters share the session's bCache pages
+    (partial_res fork kind), the paper's core CoW mechanism, now via the
+    public API."""
+    server, cfg = make_server(model)
+    with server.session(prompt_tokens(cfg, 64)) as session:
+        for a in (1, 2):
+            session.fork(a, [a], SamplingParams(max_new_tokens=4)).result()
+    kinds = server.metrics()["hit_kinds"]
+    assert kinds.get("partial_res", 0) >= 2, kinds
+
+
+# ------------------------------------------------------- stall detection
+def test_stall_detection_fails_head_request(model):
+    """Regression (satellite): a waiting request that can never allocate —
+    pool too small once the session pinned its context, running empty —
+    must fail with a ``stalled`` error after stall_limit steps instead of
+    silently burning the caller's whole step budget."""
+    server, cfg = make_server(model, max_pages=12, stall_limit=8)
+    eng = server.engine
+    session = server.session(prompt_tokens(cfg, 96, seed=6))   # pins 6 pages
+    # disjoint prompt needing more pages than can ever be freed
+    handle = server.generate(5, prompt_tokens(cfg, 120, seed=7),
+                             SamplingParams(max_new_tokens=4))
+    out = handle.result()
+    assert out.finish_reason == "stalled"
+    assert "stalled" in out.error and out.tokens == []
+    m = server.metrics()
+    assert m["stalled"] == 1
+    assert eng.steps < 8 + 20, "stall must trip promptly, not burn steps"
+    # the engine keeps serving: closing the session frees the pool
+    session.close()
+    eng.dual.base.evict(6)
+    ok = server.generate(5, prompt_tokens(cfg, 120, seed=7),
+                         SamplingParams(max_new_tokens=4)).result()
+    assert ok.finish_reason == "length" and len(ok.tokens) == 4
+
+
+def test_overlong_request_rejected_via_api(model):
+    server, cfg = make_server(model)
+    out = server.generate(0, prompt_tokens(cfg, 400),
+                          SamplingParams(max_new_tokens=4)).result()
+    assert out.finish_reason == "rejected"
+    assert "rejected" in out.error and out.tokens == []
+
+
+# ------------------------------------------- broadcast fork accounting
+def test_broadcast_amortized_share_accounting(model):
+    """Satellite: the exact int counter attributes the one shared pass to
+    its writer; the amortized float share is split across the group and
+    feeds metrics()."""
+    server, cfg = make_server(model, broadcast_fork=True, max_batch=6)
+    shared = prompt_tokens(cfg, 64, seed=8)
+    handles = [server.generate(a, list(shared),
+                               SamplingParams(max_new_tokens=4))
+               for a in range(3)]
+    outs = server.wait(handles)
+    # the broadcast covers the first 48 tokens (the final page is left to a
+    # per-request prefill so the first output token comes from real logits);
+    # each request then pays its own 16-token tail
+    exact = sorted(int(o.metrics["prefilled_tokens"]) for o in outs)
+    shares = [o.metrics["prefill_share"] for o in outs]
+    assert exact == [16, 16, 48 + 16], exact   # writer-only pass, exact ints
+    for s in shares:                            # amortized: 48/3 + own tail
+        assert abs(s - (48 / 3 + 16)) < 1e-6, shares
+    m = server.metrics()
+    assert abs(m["prefilled_tokens"] - (48 + 3 * 16)) < 1e-6
+
+
+# ------------------------------------------------- cross-policy parity
+def test_greedy_parity_forkkv_vs_prefix(model):
+    """Satellite: with greedy sampling, identical seeds, and numerically
+    identical adapters (zero-B LoRA — cache sharing is then lossless, so
+    any divergence exposes an engine bug: stale pages, wrong resume
+    position, CoW misrouting), forkkv and prefix modes produce
+    token-identical outputs for the same ReAct workload, driven entirely
+    through the public API."""
+    cfg, params, _ = model
+    lora0 = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(9), n_adapters=8,
+                                 nonzero=False)
+
+    def react_outputs(mode):
+        server, _ = make_server(model, mode=mode, max_pages=512, lora=lora0)
+        rng = np.random.default_rng(42)
+        shared = list(rng.integers(0, cfg.vocab_size, 96))
+        outputs = []
+        with server.session(shared) as session:
+            dynamic = []
+            for agent in range(3):          # sequential ReAct chain
+                instr = dynamic + list(rng.integers(0, cfg.vocab_size, 8))
+                out = session.fork(agent, instr,
+                                   SamplingParams(max_new_tokens=4,
+                                                  seed=0)).result()
+                outputs.append(out.tokens)
+                dynamic = dynamic + out.tokens + \
+                    list(rng.integers(0, cfg.vocab_size, 12))
+        return outputs
+
+    fork_out = react_outputs("forkkv")
+    prefix_out = react_outputs("prefix")
+    assert fork_out == prefix_out, (fork_out, prefix_out)
