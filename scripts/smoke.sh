@@ -44,4 +44,15 @@ echo "== session/fork API example, all three modes =="
 for mode in forkkv prefix full_reuse; do
   python examples/react_agent_tree.py --mode "$mode" --temperature 0.8
 done
+
+echo "== decode-step benchmark smoke (paged vs gather, DESIGN.md §12) =="
+python -m benchmarks.bench_decode --smoke --out BENCH_decode.smoke.json
+test -s BENCH_decode.smoke.json
+python - <<'PY'
+import json
+rep = json.load(open("BENCH_decode.smoke.json"))
+assert rep["rows"], "empty benchmark report"
+assert all(r["us_per_decode_step"] > 0 for r in rep["rows"])
+print("bench smoke OK:", rep["summary"])
+PY
 echo "smoke OK"

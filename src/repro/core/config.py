@@ -222,6 +222,15 @@ class ServeConfig:
     max_pages_per_req: int = 64      # block-table length (Smax/page)
     max_batch: int = 64              # decode batch upper bound
     max_prefill_tokens: int = 8192   # chunked-prefill budget per step
+    # batched prefill: max requests co-scheduled into one padded (B, chunk)
+    # prefill call; the token budget above is split across the
+    # power-of-two-padded batch (0 = no cap beyond the budget)
+    max_prefill_batch: int = 8
+    # page-native decode (DESIGN.md §12): hand pools + block tables to the
+    # paged ResidualAttention kernel dispatcher with batch/width bucketing.
+    # False keeps the legacy gather-to-contiguous decode for bit-parity
+    # testing (same tokens, O(B·smax) HBM traffic).
+    use_paged_kernel: bool = True
     mode: str = "forkkv"             # forkkv | prefix | full_reuse
     # beyond-paper features (DESIGN.md §9); defaults are paper-faithful.
     broadcast_fork: bool = False

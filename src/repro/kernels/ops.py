@@ -12,11 +12,15 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.kernels import paged_residual_attention as pra
 from repro.kernels import ref as ref_mod
 from repro.kernels import residual_attention as ra
 
 # Backend selection: "pallas" (interpret on CPU, compiled on TPU) or "ref".
-_BACKEND = os.environ.get("REPRO_ATTN_BACKEND", "ref")
+# Unset -> platform-aware: the Pallas kernels on real TPU (the production
+# hot path, DESIGN.md §12), the XLA ref mirror everywhere else (identical
+# numerics, no per-grid-step interpret overhead on CPU).
+_BACKEND = os.environ.get("REPRO_ATTN_BACKEND", "")
 
 
 def set_backend(name: str) -> None:
@@ -26,7 +30,10 @@ def set_backend(name: str) -> None:
 
 
 def get_backend() -> str:
-    return _BACKEND
+    if _BACKEND:
+        return _BACKEND
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
@@ -37,7 +44,7 @@ def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
     """Attention over a disaggregated KV cache.  Shapes as in ref.py."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    be = backend or _BACKEND
+    be = backend or get_backend()
     if be == "ref":
         return ref_mod.residual_attention_ref(
             q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
@@ -51,3 +58,49 @@ def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
     return ra.residual_attention_prefill(
         q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos, qpos, kv_len,
         scale=scale, causal=causal, window=window, interpret=interpret)
+
+
+def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
+                             b_v, bt_b, bt_r, kv_len, *,
+                             scale: Optional[float] = None,
+                             rope_theta: float = 10_000.0,
+                             use_rope: bool = True,
+                             backend: Optional[str] = None,
+                             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Decode attention over paged pools + block tables (DESIGN.md §12).
+
+    The serving hot path: the executor hands the pools and per-request
+    block tables straight in — no gather-to-contiguous staging.  Dispatches
+    like :func:`residual_attention`:
+
+    * ``pallas`` — the paged kernels with scalar-prefetch block tables,
+      per-request page skipping and (disaggregated variant) in-kernel
+      deferred RoPE.  Compiled on TPU; ``interpret=True`` runs the same
+      kernel code on CPU.
+    * ``ref`` — the XLA gather mirror (:func:`repro.kernels.ref.
+      paged_residual_attention_ref`); identical numerics-by-construction,
+      runs anywhere, and still only touches ``bt_b.shape[1]`` pages.
+
+    Pass ``kr_pool=None`` (with ``vr_pool``/``b_k``/``b_v``/``bt_r`` also
+    None) for the base-only variant — unified caches or no-LoRA requests.
+    ``kv_len`` counts ALL valid tokens incl. the one just written; the
+    query row sits at position ``kv_len - 1``.  Returns (B, Hq, D).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    be = backend or get_backend()
+    if be == "ref":
+        return ref_mod.paged_residual_attention_ref(
+            q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+            kv_len, scale=scale, rope_theta=rope_theta, use_rope=use_rope)
+    if interpret is None:
+        import jax
+        interpret = jax.default_backend() != "tpu"
+    if kr_pool is None:
+        return pra.paged_attention_decode_base(
+            q, kb_pool, vb_pool, bt_b, kv_len, scale=scale,
+            interpret=interpret)
+    return pra.paged_residual_attention_decode(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+        kv_len, scale=scale, rope_theta=rope_theta, use_rope=use_rope,
+        interpret=interpret)

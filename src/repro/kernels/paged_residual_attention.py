@@ -1,17 +1,32 @@
-"""Paged ResidualAttention decode kernel (TPU target).
+"""Paged ResidualAttention decode kernels (TPU target).
 
 The serving engine stores the disaggregated cache in page pools addressed by
 block tables.  The dense kernels (residual_attention.py) assume the wrapper
-gathered pages into contiguous views; THIS kernel consumes the pools
+gathered pages into contiguous views; THESE kernels consume the pools
 directly — block tables ride in as scalar-prefetch operands and the
 BlockSpec index maps dereference them, so each grid step DMA's exactly one
 (page × kv_head) tile of bCache + one page of rCache from HBM.  This is the
 Pallas analogue of SGLang's paged RadixAttention fused with ForkKV's
 on-chip reconstruction (paper §5.3), and the production decode path on real
-TPU (DESIGN.md §3).
+TPU (DESIGN.md §3, §12).
 
-RoPE for the reconstructed K residual is computed *in kernel* from the
-logical position (page_index·page_size + offset) — no sin/cos tables in HBM.
+Per-request page-count masking: the page axis of the grid is sized for the
+widest request in the batch, but a request with ``kv_len`` tokens only has
+``ceil(kv_len / page)`` live pages.  Grid steps past that point (a) clamp
+their index maps to the request's last live page — the block index repeats,
+so the Pallas pipeline skips the DMA re-fetch — and (b) skip the softmax
+update entirely under ``pl.when``, so short requests pay FLOPs for their
+own length, not the batch maximum.
+
+Two variants:
+
+* :func:`paged_residual_attention_decode` — disaggregated (bCache + rCache
+  with per-request B_k/B_v up-projections, ForkKV mode).  RoPE for the
+  reconstructed K residual is computed *in kernel* from the logical
+  position (page_index·page_size + offset) — no sin/cos tables in HBM.
+* :func:`paged_attention_decode_base` — base-only (unified caches: the
+  prefix / full_reuse baselines, or ForkKV serving base-model requests
+  with no adapter).  Same grid and skip logic, no residual stream.
 """
 from __future__ import annotations
 
@@ -25,6 +40,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INIT = -1e30
 
 
+def _last_live_page(kvl, page: int):
+    """Index of the last page holding valid tokens (kv_len >= 1 assumed;
+    clamps to page 0 for empty/padded rows)."""
+    return jnp.maximum(kvl - 1, 0) // page
+
+
 def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
             vr_ref, bk_ref, bv_ref, out_ref, m_scr, l_scr, acc_scr,
             accr_scr, *, scale: float, page: int, rope_theta: float,
@@ -33,6 +54,7 @@ def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
     j = pl.program_id(2)
     nj = pl.num_programs(2)
     g, d = q_ref.shape[2], q_ref.shape[3]
+    kvlen = kvlen_ref[b]
 
     @pl.when(j == 0)
     def _init():
@@ -41,46 +63,49 @@ def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
         accr_scr[...] = jnp.zeros_like(accr_scr)
 
-    # ---- on-the-fly K reconstruction with in-kernel deferred RoPE ---------
-    k_b = kb_ref[0, :, 0, :].astype(jnp.float32)           # (page, D)
-    k_r = kr_ref[0].astype(jnp.float32)                    # (page, R)
-    b_k = bk_ref[0, 0].astype(jnp.float32)                 # (R, D)
-    k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
-    if use_rope:
-        pos = (j * page + jax.lax.broadcasted_iota(
-            jnp.int32, (page, 1), 0)).astype(jnp.float32)  # (page, 1)
-        half = d // 2
-        freqs = 1.0 / (rope_theta ** (
-            jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) / half))
-        ang = pos * freqs                                  # (page, half)
-        sin, cos = jnp.sin(ang), jnp.cos(ang)
-        x1, x2 = k_lora[:, :half], k_lora[:, half:]
-        k_lora = jnp.concatenate([x1 * cos - x2 * sin,
-                                  x2 * cos + x1 * sin], axis=-1)
-    k = k_b + k_lora
+    # pages past ceil(kv_len/page) contribute nothing: skip their FLOPs
+    # (their DMA is already skipped by the clamped index maps)
+    @pl.when(j * page < kvlen)
+    def _compute():
+        # ---- on-the-fly K reconstruction with in-kernel deferred RoPE ----
+        k_b = kb_ref[0, :, 0, :].astype(jnp.float32)           # (page, D)
+        k_r = kr_ref[0].astype(jnp.float32)                    # (page, R)
+        b_k = bk_ref[0, 0].astype(jnp.float32)                 # (R, D)
+        k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
+        if use_rope:
+            pos = (j * page + jax.lax.broadcasted_iota(
+                jnp.int32, (page, 1), 0)).astype(jnp.float32)  # (page, 1)
+            half = d // 2
+            freqs = 1.0 / (rope_theta ** (
+                jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) / half))
+            ang = pos * freqs                                  # (page, half)
+            sin, cos = jnp.sin(ang), jnp.cos(ang)
+            x1, x2 = k_lora[:, :half], k_lora[:, half:]
+            k_lora = jnp.concatenate([x1 * cos - x2 * sin,
+                                      x2 * cos + x1 * sin], axis=-1)
+        k = k_b + k_lora
 
-    # ---- scores + online softmax with dual accumulators --------------------
-    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    kvlen = kvlen_ref[b]
-    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    mask = kpos < kvlen
-    s = jnp.where(mask, s, NEG_INIT)
+        # ---- scores + online softmax with dual accumulators --------------
+        q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = kpos < kvlen
+        s = jnp.where(mask, s, NEG_INIT)
 
-    m_prev = m_scr[:, :1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new) * mask
-    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new) * mask
+        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
 
-    v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
-    v_r = vr_ref[0].astype(jnp.float32)
-    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-        p, v_b, preferred_element_type=jnp.float32)
-    accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
-        p, v_r, preferred_element_type=jnp.float32)
-    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        v_r = vr_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v_b, preferred_element_type=jnp.float32)
+        accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
+            p, v_r, preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -120,20 +145,28 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
 
     kernel = functools.partial(_kernel, scale=scale, page=page,
                                rope_theta=rope_theta, use_rope=use_rope)
+
+    # clamp dead grid steps to the request's last live page: the block
+    # index repeats, so the pipeline skips the DMA instead of prefetching
+    # padding pages the kernel would only mask away
+    def _b_map(b, h, j, btb, btr, kvl):
+        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
+        return (btb[b, jc], 0, h, 0)
+
+    def _r_map(b, h, j, btb, btr, kvl):
+        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
+        return (btr[b, jc], 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(bsz, hkv, n_pages),
         in_specs=[
             pl.BlockSpec((1, 1, g, d),
                          lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda b, h, j, btb, btr, kvl: (btb[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda b, h, j, btb, btr, kvl: (btb[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page, r),
-                         lambda b, h, j, btb, btr, kvl: (btr[b, j], 0, 0)),
-            pl.BlockSpec((1, page, r),
-                         lambda b, h, j, btb, btr, kvl: (btr[b, j], 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, r), _r_map),
+            pl.BlockSpec((1, page, r), _r_map),
             pl.BlockSpec((1, 1, r, d),
                          lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, r, d),
@@ -156,4 +189,98 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
     )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
       kv_len.astype(jnp.int32), qt, kb_pool, vb_pool, kr_pool, vr_pool,
       bkt, bvt)
+    return out.reshape(bsz, hq, d)
+
+
+# --------------------------------------------------------------------------
+# Base-only variant (unified caches / no-LoRA requests)
+# --------------------------------------------------------------------------
+def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
+                 m_scr, l_scr, acc_scr, *, scale: float, page: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    kvlen = kvlen_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * page < kvlen)
+    def _compute():
+        k = kb_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
+        q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = kpos < kvlen
+        s = jnp.where(mask, s, NEG_INIT)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new) * mask
+        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+        v = vb_ref[0, :, 0, :].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        out_ref[0, 0] = (acc_scr[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
+                                scale: float, interpret: bool = True):
+    """Base-only paged decode: attention over the bCache pool alone.
+
+    Serves the unified-cache baselines (prefix / full_reuse) and ForkKV
+    requests without an adapter.  Same shapes as the disaggregated variant
+    minus the residual stream:
+
+    q: (B, Hq, D); kb/vb: (P, page, Hkv, D); bt_b: (B, n_pages);
+    kv_len: (B,).  Returns (B, Hq, D).
+    """
+    bsz, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    g = hq // hkv
+    n_pages = bt_b.shape[1]
+    qt = q.reshape(bsz, hkv, g, d)
+
+    kernel = functools.partial(_kernel_base, scale=scale, page=page)
+
+    def _b_map(b, h, j, btb, kvl):
+        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
+        return (btb[b, jc], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b, h, j, btb, kvl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, h, j, btb, kvl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kb_pool,
+      vb_pool)
     return out.reshape(bsz, hq, d)

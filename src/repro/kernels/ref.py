@@ -39,6 +39,57 @@ def reconstruct(k_base, v_base, k_res, v_res, b_k, b_v, sin, cos):
     return k.astype(k_base.dtype), v.astype(v_base.dtype)
 
 
+def paged_residual_attention_ref(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                 b_k, b_v, bt_b, bt_r, kv_len, *,
+                                 scale: Optional[float] = None,
+                                 rope_theta: float = 10_000.0,
+                                 use_rope: bool = True) -> jnp.ndarray:
+    """XLA mirror of the paged decode kernels: gather the block-table pages
+    into contiguous views, then run the dense oracle.  Same interface as
+    :func:`repro.kernels.paged_residual_attention.
+    paged_residual_attention_decode` (pass ``kr_pool=None`` for the
+    base-only variant), so the ``ops`` dispatcher can swap backends.
+
+    The gather touches only ``bt_b.shape[1]`` pages per request — the
+    serving executor crops/buckets block tables to the live page count, so
+    even this fallback's HBM traffic scales with actual ``kv_len`` rather
+    than the engine-wide ``smax`` (DESIGN.md §12).
+
+    q: (B, Hq, D); kb/vb: (P, page, Hkv, D); kr/vr: (Pr, page, R) or None;
+    b_k/b_v: (B, R, Hkv*D) or None; bt_b/bt_r: (B, W); kv_len: (B,) —
+    the query row sits at position ``kv_len - 1``.  Returns (B, Hq, D).
+    """
+    bsz, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    sk = bt_b.shape[1] * page
+    if scale is None:
+        scale = d ** -0.5
+    kb = kb_pool[bt_b].reshape(bsz, sk, hkv, d)
+    vb = vb_pool[bt_b].reshape(bsz, sk, hkv, d)
+    if kr_pool is None:
+        k, v = kb, vb
+    else:
+        kr = kr_pool[bt_r].reshape(bsz, sk, -1)
+        vr = vr_pool[bt_r].reshape(bsz, sk, -1)
+        kpos = jnp.broadcast_to(jnp.arange(sk), (bsz, sk))
+        if use_rope:
+            sin, cos = rope_lib.rope_sincos(kpos, d, rope_theta)
+        else:
+            sin = jnp.zeros(kpos.shape + (d // 2,), jnp.float32)
+            cos = jnp.ones(kpos.shape + (d // 2,), jnp.float32)
+        k, v = reconstruct(kb, vb, kr, vr, b_k, b_v,
+                           sin.astype(q.dtype), cos.astype(q.dtype))
+    s = attn_lib._gqa_scores(q[:, None], k) * scale     # (B, Hq, 1, Sk)
+    kp = jnp.arange(sk)[None, None, None, :]
+    # the query sits at kv_len - 1, so the causal bound and the validity
+    # bound coincide: one mask term covers both
+    mask = kp < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, attn_lib.NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    return attn_lib._gqa_out(p, v).astype(q.dtype)[:, 0]
+
+
 def residual_attention_ref(q, k_base, v_base, k_res, v_res, b_k, b_v,
                            sin, cos, *, qpos: jnp.ndarray,
                            kv_len: Optional[jnp.ndarray] = None,

@@ -27,7 +27,8 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  max_pages_per_req: int = 24, seed: int = 0,
                  host_tier_bytes: int = 0, tier_promote_limit: int = 0,
                  broadcast_fork: bool = False,
-                 adaptive_fallback: bool = False):
+                 adaptive_fallback: bool = False,
+                 use_paged_kernel: bool = True):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -38,7 +39,8 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      host_tier_bytes=host_tier_bytes,
                      tier_promote_limit=tier_promote_limit,
                      broadcast_fork=broadcast_fork,
-                     adaptive_fallback=adaptive_fallback)
+                     adaptive_fallback=adaptive_fallback,
+                     use_paged_kernel=use_paged_kernel)
     return ForkServer(cfg, params, lora, sc), cfg
 
 
@@ -79,6 +81,14 @@ def main() -> None:
     ap.add_argument("--tier-promote-limit", type=int, default=0,
                     help="max pages promoted host→device per match "
                          "(0 = unlimited)")
+    ap.add_argument("--gather-decode", action="store_true",
+                    help="disable the page-native decode kernel and use "
+                         "the legacy gather-to-contiguous path "
+                         "(bit-parity testing, DESIGN.md §12)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print step-phase wall-clock totals "
+                         "(prefill/decode/sync ms) and compiled decode "
+                         "variant count")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -87,7 +97,8 @@ def main() -> None:
         host_tier_bytes=args.host_tier_mb << 20,
         tier_promote_limit=args.tier_promote_limit,
         broadcast_fork=args.broadcast_fork,
-        adaptive_fallback=args.adaptive_fallback)
+        adaptive_fallback=args.adaptive_fallback,
+        use_paged_kernel=not args.gather_decode)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed, max_new_tokens=args.max_new)
@@ -116,6 +127,15 @@ def main() -> None:
                   f"promoted_bytes={rep['promoted_bytes']} "
                   f"host_used_bytes={rep['host_used_bytes']} "
                   f"preemptions={rep['preemptions']}")
+        if args.stats:
+            per_step = rep["decode_ms"] / max(1, rep["decode_steps"])
+            print(f"decode={'paged' if rep['use_paged_kernel'] else 'gather'}"
+                  f" prefill_ms={rep['prefill_ms']:.1f} "
+                  f"decode_ms={rep['decode_ms']:.1f} "
+                  f"sync_ms={rep['sync_ms']:.1f} "
+                  f"decode_steps={rep['decode_steps']} "
+                  f"decode_ms_per_step={per_step:.2f} "
+                  f"decode_jit_variants={rep['decode_jit_variants']}")
 
 
 if __name__ == "__main__":

@@ -205,7 +205,7 @@ class ForkServer:
     """Client-facing serving frontend over the ForkKV :class:`Engine`.
 
     One ``poll()`` call advances the engine one step (admission + at most
-    one chunked prefill + one decode round) and dispatches TokenEvents to
+    one batched prefill call + one decode round) and dispatches TokenEvents to
     every live handle — the single pump replacing the per-caller busy
     loops of the seed (``WorkflowDriver._run_request`` et al.).
     """

@@ -8,10 +8,13 @@ Three cache-sharing policies (paper §7.1):
   * ``full_reuse`` — one unified cache shared across adapters (lossy
                      baseline; first computer wins)
 
-Continuous batching: each engine step runs at most one chunked prefill
-(budgeted) plus one decode step over all running requests.  Pools are
-refcounted; under pressure the decoupled LRU eviction frees tree leaves;
-requests that cannot allocate are queued (admission control) or preempted.
+Continuous batching: each engine step runs at most one BATCHED prefill
+call — co-resident chunks from every prefill-state request packed into
+one padded (B, chunk) executor call under the ``max_prefill_tokens``
+budget (DESIGN.md §12) — plus one decode step over all running requests.
+Pools are refcounted; under pressure the decoupled LRU eviction frees
+tree leaves; requests that cannot allocate are queued (admission
+control) or preempted.
 
 With ``ServeConfig.host_tier_bytes > 0`` both device pools are wrapped in
 :class:`~repro.serving.tiers.TieredPagePool` (DESIGN.md §10): eviction
@@ -29,7 +32,7 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
-import jax.numpy as jnp
+import numpy as np
 
 from repro.core.config import ModelConfig, ServeConfig
 from repro.serving.executor import PagedExecutor, pool_bytes
@@ -109,6 +112,7 @@ class Engine:
         self.executor = PagedExecutor(cfg, params, lora, sc, disagg,
                                       self.max_pages_per_req)
         self.executor.dump_page = dump_b
+        self.executor.dump_page_r = dump_r
         self.dump_b, self.dump_r = dump_b, dump_r
         if self.mode == "forkkv":
             self.dual = DualRadixTree(self.base_pool, self.res_pool)
@@ -143,6 +147,13 @@ class Engine:
         self.peak_base_pages = 0
         self.peak_res_pages = 0
         self.agent_ids_seen = set()
+        # step-phase wall-clock totals (ms).  prefill/decode time the
+        # executor calls (async dispatch + trace/compile); sync times the
+        # blocking device→host reads — ONE per step, not one per chunk —
+        # so benchmark deltas are attributable to a phase (DESIGN.md §12)
+        self.prefill_ms = 0.0
+        self.decode_ms = 0.0
+        self.sync_ms = 0.0
 
     # ------------------------------------------------------------- submit
     def submit(self, req: Request) -> None:
@@ -291,44 +302,77 @@ class Engine:
             return p
         return self.dump_b if kind == "base" else self.dump_r
 
-    def _prefill_one(self, req: Request) -> None:
-        page = self.sc.page_size
-        start = req.prefill_pos
-        end = min(len(req.prompt), start + self.sc.max_prefill_tokens)
-        chunk_tokens = req.prompt[start:end]
-        n = len(chunk_tokens)
-        bt_b = self._bt(req.base_pages)
-        bt_r = self._bt(req.res_pages if self.mode == "forkkv" else [])
-        wb = [self._write_page_for(req, p, "base")
-              for p in range(start, end)]
-        if self.mode == "forkkv":
-            wr = [self._write_page_for(req, p, "res")
-                  for p in range(start, end)]
-        else:
-            wr = [self.dump_r] * n
-        chunk_size = self.sc.max_prefill_tokens
-        sp = req.params
-        next_tok, _ = self.executor.prefill_chunk(
-            chunk_tokens, start, req.adapter_id, bt_b, bt_r, wb, wr,
-            chunk_size, temp=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
-            seed=sp.seed, spos=len(req.output))
-        req.prefill_pos = end
-        req.kv_len = end
-        req.prefilled_tokens += n
-        req.prefill_share += n
-        if end >= len(req.prompt):
-            if req.max_new_tokens == 0:
+    def _prefill_batch(self) -> bool:
+        """Batched multi-request prefill: pack co-resident chunks from every
+        request in the ``prefill`` state into ONE padded ``(B, chunk)``
+        executor call, splitting the ``max_prefill_tokens`` budget across
+        the power-of-two-padded batch (B=1 degenerates to the seed's
+        single-request chunking, same compiled shape).  One host sync per
+        step — and only when some row finished its prompt and needs its
+        first token on the host."""
+        group = [r for r in self.running if r.state == "prefill"]
+        if not group:
+            return False
+        cap = self.sc.max_prefill_batch or len(group)
+        group = group[:max(1, min(cap, self.sc.max_prefill_tokens))]
+        # the executor owns the shape policy: one plan drives both the
+        # prompt slicing here and the batch padding inside prefill_batch
+        _, chunk = self.executor.prefill_plan(len(group))
+        chunks, starts, aids, btsb, btsr, wbs, wrs, ends = \
+            [], [], [], [], [], [], [], []
+        temps, tks, tps, seeds, spos = [], [], [], [], []
+        for r in group:
+            start = r.prefill_pos
+            end = min(len(r.prompt), start + chunk)
+            ends.append(end)
+            chunks.append(r.prompt[start:end])
+            starts.append(start)
+            aids.append(r.adapter_id)
+            btsb.append(list(r.base_pages))
+            btsr.append(list(r.res_pages) if self.mode == "forkkv" else [])
+            wbs.append([self._write_page_for(r, p, "base")
+                        for p in range(start, end)])
+            wrs.append([self._write_page_for(r, p, "res")
+                        for p in range(start, end)]
+                       if self.mode == "forkkv"
+                       else [self.dump_r] * (end - start))
+            sp = r.params
+            temps.append(sp.temperature)
+            tks.append(sp.top_k)
+            tps.append(sp.top_p)
+            seeds.append(sp.seed)
+            spos.append(len(r.output))
+        t0 = time.perf_counter()
+        next_toks, _ = self.executor.prefill_batch(
+            chunks, starts, aids, btsb, btsr, wbs, wrs, chunk,
+            temps=temps, top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
+        self.prefill_ms += (time.perf_counter() - t0) * 1e3
+        host_toks = None
+        for i, r in enumerate(group):
+            r.prefill_pos = ends[i]
+            r.kv_len = ends[i]
+            n = len(chunks[i])
+            r.prefilled_tokens += n
+            r.prefill_share += n
+            if ends[i] < len(r.prompt):
+                continue
+            if r.max_new_tokens == 0:
                 # context-only request (session prefill): the cache is the
                 # product — commit it and finish without generating
-                self._finish(req, reason="length")
-                return
-            req.state = "decode"
-            tok = int(next_tok)
-            req.output.append(tok)
+                self._finish(r, reason="length")
+                continue
+            r.state = "decode"
+            if host_toks is None:       # single blocking D2H for the step
+                t0 = time.perf_counter()
+                host_toks = np.asarray(next_toks)
+                self.sync_ms += (time.perf_counter() - t0) * 1e3
+            tok = int(host_toks[i])
+            r.output.append(tok)
             # the sampled token's KV is not cached yet; it will be written
             # when the decode step consumes it
-            if tok in sp.stop_token_ids:
-                self._finish(req, reason="stop")
+            if tok in r.params.stop_token_ids:
+                self._finish(r, reason="stop")
+        return True
 
     def _bt(self, pages: Sequence[int]) -> List[int]:
         bt = list(pages)[:self.max_pages_per_req]
@@ -343,7 +387,6 @@ class Engine:
         if not batch:
             return False
         self.decode_batch_hist.append(len(batch))
-        bsz = len(batch)
         page = self.sc.page_size
         toks, kvl, ids, btb, btr, wpb, wpr, woff = [], [], [], [], [], [], \
             [], []
@@ -353,9 +396,9 @@ class Engine:
             toks.append(last)
             kvl.append(r.kv_len)
             ids.append(r.adapter_id)
-            btb.append(self._bt(r.base_pages))
-            btr.append(self._bt(r.res_pages if self.mode == "forkkv"
-                                else []))
+            # RAW page lists: the executor owns batch/width bucketing
+            btb.append(list(r.base_pages))
+            btr.append(list(r.res_pages) if self.mode == "forkkv" else [])
             wpb.append(self._write_page_for(r, r.kv_len, "base"))
             wpr.append(self._write_page_for(r, r.kv_len, "res")
                        if self.mode == "forkkv" else self.dump_r)
@@ -366,28 +409,18 @@ class Engine:
             tps.append(sp.top_p)
             seeds.append(sp.seed)
             spos.append(len(r.output))
-        # pad to max_batch for stable jit shapes
-        pad = self.sc.max_batch - bsz
-        toks += [0] * pad
-        kvl += [0] * pad
-        ids += [0] * pad
-        btb += [self._bt([])] * pad
-        btr += [self._bt([])] * pad
-        wpb += [self.dump_b] * pad
-        wpr += [self.dump_r] * pad
-        woff += [0] * pad
-        temps += [0.0] * pad
-        tks += [0] * pad
-        tps += [1.0] * pad
-        seeds += [0] * pad
-        spos += [0] * pad
+        t0 = time.perf_counter()
         next_toks, _ = self.executor.decode(toks, kvl, ids, btb, btr, wpb,
                                             wpr, woff, temps=temps,
                                             top_ks=tks, top_ps=tps,
                                             seeds=seeds, spos=spos)
+        self.decode_ms += (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        host_toks = np.asarray(next_toks)   # ONE blocking D2H per step
+        self.sync_ms += (time.perf_counter() - t0) * 1e3
         for i, r in enumerate(batch):
             r.kv_len += 1
-            tok = int(next_toks[i])
+            tok = int(host_toks[i])
             r.output.append(tok)
             if tok in r.params.stop_token_ids:
                 self._finish(r, reason="stop")
@@ -508,15 +541,13 @@ class Engine:
             if req.state == "decode" and req.max_new_tokens == 0:
                 # fully-cached context-only request: nothing to compute
                 self._finish(req, reason="length")
-        # one chunked prefill per step (broadcast if several agents share it)
+        # one batched prefill call per step (broadcast if several agents
+        # share an identical upcoming chunk, else co-resident chunks packed
+        # into one padded (B, chunk) executor call)
         if self._try_broadcast():
             progress = True
-        else:
-            for r in self.running:
-                if r.state == "prefill":
-                    self._prefill_one(r)
-                    progress = True
-                    break
+        elif self._prefill_batch():
+            progress = True
         if self._decode_all():
             progress = True
         # stall detection: waiting work + nothing admitted/prefilled/decoded
@@ -618,4 +649,11 @@ class Engine:
             "preemptions": self.preemptions,
             "rejected": self.rejected,
             "stalled": self.stalled,
+            # step-phase wall clock + compiled-variant probe (DESIGN.md §12)
+            "prefill_ms": self.prefill_ms,
+            "decode_ms": self.decode_ms,
+            "sync_ms": self.sync_ms,
+            "decode_steps": len(self.decode_batch_hist),
+            "decode_jit_variants": self.executor.decode_cache_size(),
+            "use_paged_kernel": self.executor.use_paged,
         }

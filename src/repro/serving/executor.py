@@ -3,9 +3,24 @@
 The pools are jnp arrays of shape (L, num_pages, page_size, ...); requests
 address them through block tables.  In ForkKV mode two pools exist — the
 shared bCache pool and the per-agent rCache pool — and attention runs over
-the disaggregated layout (the XLA mirror of the ResidualAttention kernel;
-on real TPU the gather + attend lowers to the Pallas kernel with paged
-index maps, see DESIGN.md §3).
+the disaggregated layout.
+
+Decode is page-native (DESIGN.md §12): the jitted step hands the pools and
+per-request block tables straight to the ``paged_residual_attention``
+dispatcher (``kernels/ops.py``) — the Pallas kernel on TPU, its XLA gather
+mirror elsewhere — so HBM traffic scales with each request's actual
+``kv_len`` instead of the engine-wide ``smax``.  The legacy
+gather-to-contiguous path survives behind ``ServeConfig.use_paged_kernel
+= False`` for bit-parity testing.  Compiled shapes are bucketed: the
+decode batch pads to the next power of two (capped at ``max_batch``) and
+the paged block-table width to the next power of two of the batch's live
+page count, so the number of compiled decode variants stays logarithmic
+under fluctuating load instead of retracing per batch size.
+
+Prefill is batched: ``prefill_batch`` packs several requests' chunks into
+one padded ``(B, chunk)`` call (the engine schedules co-resident chunks
+under the ``max_prefill_tokens`` budget).  Executor methods return DEVICE
+arrays — no host syncs here; the engine blocks once per step.
 
 CoW discipline: prefill never writes to inherited (shared) pages — the
 engine passes the reserved DUMP page as the write target for positions
@@ -21,11 +36,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import ModelConfig, ServeConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import base
 from repro.models import transformer as tfm
 from repro.serving.sampling import sample_tokens
 
 Params = Dict
+
+# floor for the bucketed block-table width (pages): keeps the variant count
+# small for short contexts without giving up the kv_len-proportional scaling
+MIN_TABLE_PAGES = 4
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(0, n - 1).bit_length()
 
 
 class Pools(NamedTuple):
@@ -70,11 +95,19 @@ class PagedExecutor:
         self.page = serve_cfg.page_size
         self.max_pages_per_req = max_pages_per_req
         self.smax = max_pages_per_req * self.page
+        # paged decode: pools + block tables straight into the kernel
+        # dispatcher.  The paged kernels have no sliding-window support yet,
+        # so SWA models keep the gather path regardless of the flag.
+        self.use_paged = serve_cfg.use_paged_kernel \
+            and cfg.sliding_window == 0
         res_factor = max(1, cfg.kv_dim // max(cfg.lora.rank, 1))             if self.disagg else 1
         self.num_res_pages = serve_cfg.max_pages * res_factor             if self.disagg else serve_cfg.max_pages
         self.pools = make_pools(cfg, serve_cfg.max_pages,
                                 self.num_res_pages, self.page, self.disagg)
-        self.dump_page = serve_cfg.max_pages - 1   # reserved scratch page
+        # reserved scratch pages (the engine overwrites these with the pages
+        # it actually allocated); residual pool has its OWN dump page
+        self.dump_page = serve_cfg.max_pages - 1
+        self.dump_page_r = self.num_res_pages - 1
         # ``sampled`` is static: all-greedy batches (the default) compile
         # the seed's pure-argmax body with the sampling math dead-code
         # eliminated; a second variant exists only once sampling is used
@@ -118,7 +151,7 @@ class PagedExecutor:
         number of compiled variants stays logarithmic.
         """
         n = len(page_ids)
-        npad = 1 << max(0, n - 1).bit_length()
+        npad = _pow2(n)
         ids = list(page_ids) + [page_ids[0]] * (npad - n)
         blobs = list(blobs) + [blobs[0]] * (npad - n)
         k = jnp.asarray(np.stack([b["k"] for b in blobs], axis=1))
@@ -182,25 +215,31 @@ class PagedExecutor:
             v_base = v_base + v_off
         return k_base, v_base, None, None, None, None
 
+    def _pad_table(self, pages: Sequence[int], width: int,
+                   dump: int) -> List[int]:
+        """Crop/pad one block table to ``width`` entries."""
+        bt = list(pages)[:width]
+        return bt + [dump] * (width - len(bt))
+
     # ------------------------------------------------------------- decode
     def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
                    bt_r, wpage_b, wpage_r, woff, temps, top_ks, top_ps,
                    seeds, spos, *, sampled):
         """One decode step for a padded batch.
 
-        tokens/kv_len/adapter_ids: (B,); bt_*: (B, maxpages) block tables;
-        wpage_*: (B,) page indices to write the new token's KV into
-        (dump page for inactive rows); woff: (B,) in-page offsets;
-        temps/top_ks/top_ps/seeds/spos: (B,) per-row sampling params
-        (temp <= 0 -> greedy argmax, the seed's exact path); sampled:
-        static — False compiles the argmax-only body.
+        tokens/kv_len/adapter_ids: (B,); bt_*: (B, W) block tables (W is
+        the bucketed live width on the paged path, ``max_pages_per_req``
+        on the gather path); wpage_*: (B,) page indices to write the new
+        token's KV into (dump page for inactive rows); woff: (B,) in-page
+        offsets; temps/top_ks/top_ps/seeds/spos: (B,) per-row sampling
+        params (temp <= 0 -> greedy argmax, the seed's exact path);
+        sampled: static — False compiles the argmax-only body.
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
         x = self.params["embed"][tokens][:, None]
         kmask_pos = None
         new_pools = pools
-        bidx = jnp.arange(bsz)
         for li in range(cfg.num_layers):
             p_l = self._layer_params(li)
             lora_l = self._lora_layer(li)
@@ -218,24 +257,37 @@ class PagedExecutor:
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
             new_pools = Pools(kbp, vbp, krp, vrp)
-            # gather this request's pages -> contiguous view
-            kc = kbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
-            vc = vbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
-            if self.disagg:
-                krc = krp[li][bt_r].reshape(bsz, self.smax, -1)
-                vrc = vrp[li][bt_r].reshape(bsz, self.smax, -1)
-                bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
-                bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
+            if self.use_paged:
+                # page-native attention: pools + block tables, no gather
+                attn = kernel_ops.paged_residual_attention(
+                    q[:, 0], kbp[li], vbp[li],
+                    krp[li] if self.disagg else None,
+                    vrp[li] if self.disagg else None,
+                    bk if self.disagg else None,
+                    bv if self.disagg else None,
+                    bt_b, bt_r if self.disagg else None, kv_len + 1,
+                    scale=cfg.resolved_head_dim ** -0.5,
+                    rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
             else:
-                krc = vrc = bk_rows = bv_rows = None
-            if kmask_pos is None:
-                kmask_pos = jnp.broadcast_to(jnp.arange(self.smax)[None],
-                                             (bsz, self.smax))
-            attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
-                               kmask_pos, kv_len + 1, kv_len[:, None],
-                               cfg.sliding_window,
-                               cfg.resolved_head_dim ** -0.5, cfg,
-                               self.disagg)
+                # legacy: gather this request's pages -> contiguous view
+                w = bt_b.shape[1] * self.page
+                kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                if self.disagg:
+                    krc = krp[li][bt_r].reshape(bsz, w, -1)
+                    vrc = vrp[li][bt_r].reshape(bsz, w, -1)
+                    bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
+                    bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
+                else:
+                    krc = vrc = bk_rows = bv_rows = None
+                if kmask_pos is None:
+                    kmask_pos = jnp.broadcast_to(jnp.arange(w)[None],
+                                                 (bsz, w))
+                attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
+                                   kmask_pos, kv_len + 1, kv_len[:, None],
+                                   cfg.sliding_window,
+                                   cfg.resolved_head_dim ** -0.5, cfg,
+                                   self.disagg)
             x = x + attn.reshape(bsz, 1, -1) @ p_l["wo"]
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
@@ -247,15 +299,52 @@ class PagedExecutor:
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return new_pools, next_tok, logits
 
-    def decode(self, tokens, kv_len, adapter_ids, bt_b, bt_r, wpage_b,
-               wpage_r, woff, temps=None, top_ks=None, top_ps=None,
-               seeds=None, spos=None):
+    def decode(self, tokens, kv_len, adapter_ids, base_tables, res_tables,
+               wpage_b, wpage_r, woff, temps=None, top_ks=None,
+               top_ps=None, seeds=None, spos=None):
+        """One decode step over ``len(tokens)`` live rows.
+
+        ``base_tables``/``res_tables`` are RAW per-request page lists; this
+        method owns the shape policy: the batch pads to the next power of
+        two (<= ``max_batch``) and, on the paged path, block tables
+        crop/pad to the bucketed live width — so compile variants stay
+        O(log max_batch · log max_pages_per_req) while per-step HBM
+        traffic tracks actual ``kv_len``.  Returns DEVICE arrays
+        ``(next_tok, logits)``; rows past the live count are padding.
+        """
         bsz = len(tokens)
-        temps = [0.0] * bsz if temps is None else temps
-        top_ks = [0] * bsz if top_ks is None else top_ks
-        top_ps = [1.0] * bsz if top_ps is None else top_ps
-        seeds = [0] * bsz if seeds is None else seeds
-        spos = [0] * bsz if spos is None else spos
+        assert bsz <= self.sc.max_batch, (bsz, self.sc.max_batch)
+        bpad = min(_pow2(bsz), self.sc.max_batch)
+        if self.use_paged:
+            need = max(kvl // self.page + 1 for kvl in kv_len)
+            width = min(self.max_pages_per_req,
+                        max(min(MIN_TABLE_PAGES, self.max_pages_per_req),
+                            _pow2(need)))
+        else:
+            width = self.max_pages_per_req
+        bt_b = [self._pad_table(p, width, self.dump_page)
+                for p in base_tables]
+        bt_r = [self._pad_table(p, width, self.dump_page_r)
+                for p in res_tables]
+        temps = list(temps) if temps is not None else [0.0] * bsz
+        top_ks = list(top_ks) if top_ks is not None else [0] * bsz
+        top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
+        seeds = list(seeds) if seeds is not None else [0] * bsz
+        spos = list(spos) if spos is not None else [0] * bsz
+        pad = bpad - bsz
+        tokens = list(tokens) + [0] * pad
+        kv_len = list(kv_len) + [0] * pad
+        adapter_ids = list(adapter_ids) + [0] * pad
+        bt_b += [[self.dump_page] * width] * pad
+        bt_r += [[self.dump_page_r] * width] * pad
+        wpage_b = list(wpage_b) + [self.dump_page] * pad
+        wpage_r = list(wpage_r) + [self.dump_page_r] * pad
+        woff = list(woff) + [0] * pad
+        temps += [0.0] * pad
+        top_ks += [0] * pad
+        top_ps += [1.0] * pad
+        seeds += [0] * pad
+        spos += [0] * pad
         self.pools, next_tok, logits = self._decode(
             self.pools, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(kv_len, jnp.int32),
@@ -269,70 +358,150 @@ class PagedExecutor:
             sampled=any(t > 0 for t in temps))
         return next_tok, logits
 
-    # ------------------------------------------------------------ prefill
-    def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_id,
-                    bt_b, bt_r, wpages_b, wpages_r, temp, top_k, top_p,
-                    seed, spos, *, chunk, sampled):
-        """Chunked prefill for ONE request.
+    def decode_cache_size(self) -> int:
+        """Number of compiled decode variants (bucket coverage probe)."""
+        try:
+            return self._decode._cache_size()
+        except Exception:       # pragma: no cover - older jax
+            return -1
 
-        tokens: (chunk,) padded; start: scalar absolute position of
-        tokens[0]; n_valid: scalar #real tokens; wpages_*: (chunk,) page to
-        write each token into (dump page where the cache is inherited —
-        CoW: shared pages are never written); temp/top_k/top_p/seed/spos:
-        scalar sampling params for the first generated token (sampled:
-        static — False compiles the argmax-only body).
+    # ------------------------------------------------------------ prefill
+    def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_ids,
+                    bt_b, bt_r, wpages_b, wpages_r, temps, top_ks, top_ps,
+                    seeds, spos, *, chunk, sampled):
+        """Chunked prefill for a PADDED BATCH of requests.
+
+        tokens: (B, chunk) padded; start: (B,) absolute position of each
+        row's tokens[0]; n_valid: (B,) #real tokens per row (0 for padding
+        rows); wpages_*: (B, chunk) page to write each token into (dump
+        page where the cache is inherited — CoW: shared pages are never
+        written); temps/top_ks/top_ps/seeds/spos: (B,) sampling params for
+        each row's first generated token (sampled: static — False compiles
+        the argmax-only body).
         """
         cfg = self.cfg
-        positions = start + jnp.arange(chunk)
-        x = self.params["embed"][tokens][None]        # (1, chunk, d)
-        ids = adapter_id[None]
+        bsz = tokens.shape[0]
+        positions = start[:, None] + jnp.arange(chunk)[None]    # (B, chunk)
+        x = self.params["embed"][tokens]                        # (B, chunk, d)
         woff = positions % self.page
-        valid = jnp.arange(chunk) < n_valid
+        valid = jnp.arange(chunk)[None] < n_valid[:, None]      # (B, chunk)
         new_pools = pools
         for li in range(cfg.num_layers):
             p_l = self._layer_params(li)
             lora_l = self._lora_layer(li)
             h = base.rms_norm(x, p_l["ln1"], cfg.norm_eps)
-            q, sin, cos = tfm._qkv(p_l, h, cfg, lora_l, ids, positions[None])
+            q, sin, cos = tfm._qkv(p_l, h, cfg, lora_l, adapter_ids,
+                                   positions)
             kb_, vb_, kr_, vr_, bk, bv = self._project_kv(
-                p_l, lora_l, h, sin, cos, ids)
+                p_l, lora_l, h, sin, cos, adapter_ids)
             wp_b = jnp.where(valid, wpages_b, self.dump_page)
-            wp_r = jnp.where(valid, wpages_r, self.dump_page)
-            kbp = new_pools.kb.at[li, wp_b, woff].set(kb_[0])
-            vbp = new_pools.vb.at[li, wp_b, woff].set(vb_[0])
+            wp_r = jnp.where(valid, wpages_r, self.dump_page_r)
+            kbp = new_pools.kb.at[li, wp_b, woff].set(kb_)
+            vbp = new_pools.vb.at[li, wp_b, woff].set(vb_)
             if self.disagg:
-                krp = new_pools.kr.at[li, wp_r, woff].set(kr_[0])
-                vrp = new_pools.vr.at[li, wp_r, woff].set(vr_[0])
+                krp = new_pools.kr.at[li, wp_r, woff].set(kr_)
+                vrp = new_pools.vr.at[li, wp_r, woff].set(vr_)
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
             new_pools = Pools(kbp, vbp, krp, vrp)
-            kc = kbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
-            vc = vbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
+            kc = kbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
+            vc = vbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
             if self.disagg:
-                krc = krp[li][bt_r].reshape(1, self.smax, -1)
-                vrc = vrp[li][bt_r].reshape(1, self.smax, -1)
-                bk_rows = bk.reshape(1, cfg.lora.rank, -1)
-                bv_rows = bv.reshape(1, cfg.lora.rank, -1)
+                krc = krp[li][bt_r].reshape(bsz, self.smax, -1)
+                vrc = vrp[li][bt_r].reshape(bsz, self.smax, -1)
+                bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
+                bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
             else:
                 krc = vrc = bk_rows = bv_rows = None
-            kmask_pos = jnp.arange(self.smax)[None]
+            kmask_pos = jnp.broadcast_to(jnp.arange(self.smax)[None],
+                                         (bsz, self.smax))
             attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
-                               kmask_pos, (start + n_valid)[None],
-                               positions[None], cfg.sliding_window,
+                               kmask_pos, start + n_valid, positions,
+                               cfg.sliding_window,
                                cfg.resolved_head_dim ** -0.5, cfg,
                                self.disagg)
-            x = x + attn.reshape(1, chunk, -1) @ p_l["wo"]
+            x = x + attn.reshape(bsz, chunk, -1) @ p_l["wo"]
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
-        # logits of the LAST VALID token
-        idx = jnp.maximum(n_valid - 1, 0)
-        logits = tfm.unembed(self.params, x[:, idx][:, None], cfg)[0, 0]
+        # per-row logits of the LAST VALID token
+        idx = jnp.maximum(n_valid - 1, 0).astype(jnp.int32)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = tfm.unembed(self.params, x_last, cfg)[:, 0]    # (B, V)
         if sampled:
-            next_tok = sample_tokens(logits[None], temp[None], top_k[None],
-                                     top_p[None], seed[None], spos[None])[0]
+            next_tok = sample_tokens(logits, temps, top_ks, top_ps, seeds,
+                                     spos)
         else:
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return new_pools, next_tok, logits
+
+    def prefill_plan(self, n_rows: int):
+        """Shape policy for a batched prefill of ``n_rows`` requests:
+        returns ``(bpad, chunk)`` — the power-of-two padded batch and the
+        per-row token budget (``max_prefill_tokens`` split across the
+        PADDED batch, so compile variants stay logarithmic and B=1
+        degenerates to the seed's single-request chunk).  The engine
+        slices prompts with this BEFORE calling :meth:`prefill_batch`,
+        which pads with the same plan."""
+        bpad = _pow2(max(1, n_rows))
+        return bpad, max(1, self.sc.max_prefill_tokens // bpad)
+
+    def prefill_batch(self, chunks, starts, adapter_ids, base_tables,
+                      res_tables, wpages_b, wpages_r, chunk_size,
+                      temps=None, top_ks=None, top_ps=None, seeds=None,
+                      spos=None):
+        """Batched chunked prefill: ``len(chunks)`` rows padded per
+        :meth:`prefill_plan`, each row padded to ``chunk_size`` tokens.
+        Block tables arrive as RAW page lists.  Returns DEVICE arrays
+        ``(next_tok, logits)`` — the engine syncs once per step, not per
+        chunk.
+        """
+        bsz = len(chunks)
+        bpad = self.prefill_plan(bsz)[0]
+        temps = list(temps) if temps is not None else [0.0] * bsz
+        top_ks = list(top_ks) if top_ks is not None else [0] * bsz
+        top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
+        seeds = list(seeds) if seeds is not None else [0] * bsz
+        spos = list(spos) if spos is not None else [0] * bsz
+        w = self.max_pages_per_req
+        toks, nvalid, wb, wr, btb, btr = [], [], [], [], [], []
+        for i in range(bpad):
+            if i < bsz:
+                row = list(chunks[i])
+                pad = chunk_size - len(row)
+                toks.append(row + [0] * pad)
+                nvalid.append(len(row))
+                wb.append(list(wpages_b[i]) + [self.dump_page] * pad)
+                wr.append(list(wpages_r[i]) + [self.dump_page_r] * pad)
+                btb.append(self._pad_table(base_tables[i], w,
+                                           self.dump_page))
+                btr.append(self._pad_table(res_tables[i], w,
+                                           self.dump_page_r))
+            else:               # padding row: all writes go to the dump
+                toks.append([0] * chunk_size)
+                nvalid.append(0)
+                wb.append([self.dump_page] * chunk_size)
+                wr.append([self.dump_page_r] * chunk_size)
+                btb.append([self.dump_page] * w)
+                btr.append([self.dump_page_r] * w)
+        pad = bpad - bsz
+        starts = list(starts) + [0] * pad
+        adapter_ids = list(adapter_ids) + [0] * pad
+        temps += [0.0] * pad
+        top_ks += [0] * pad
+        top_ps += [1.0] * pad
+        seeds += [0] * pad
+        spos += [0] * pad
+        self.pools, next_tok, logits = self._prefill(
+            self.pools, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(starts, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+            jnp.asarray(adapter_ids, jnp.int32),
+            jnp.asarray(btb, jnp.int32), jnp.asarray(btr, jnp.int32),
+            jnp.asarray(wb, jnp.int32), jnp.asarray(wr, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
+            jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(spos, jnp.int32),
+            chunk=chunk_size, sampled=any(t > 0 for t in temps))
+        return next_tok, logits
 
     # ------------------------------------------------- broadcast fork
     def _prefill_broadcast_fn(self, pools: Pools, tokens, start, n_valid,
@@ -373,7 +542,7 @@ class PagedExecutor:
             vr_ = jnp.einsum("sd,kdr->ksr", h[0], a_v.astype(x.dtype)) \
                 * sc[:, None, None]
             wp_b = jnp.where(valid, wpages_b, self.dump_page)
-            wp_r = jnp.where(valid[None], wpages_r, self.dump_page)
+            wp_r = jnp.where(valid[None], wpages_r, self.dump_page_r)
             kbp = new_pools.kb.at[li, wp_b, woff].set(kb_[0])
             vbp = new_pools.vb.at[li, wp_b, woff].set(vb_[0])
             krp = new_pools.kr.at[li, wp_r, woff[None]].set(kr_)
@@ -398,7 +567,7 @@ class PagedExecutor:
         pad = chunk_size - n
         toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
         wb = jnp.asarray(list(wpages_b) + [self.dump_page] * pad, jnp.int32)
-        wr = jnp.asarray([list(w) + [self.dump_page] * pad
+        wr = jnp.asarray([list(w) + [self.dump_page_r] * pad
                           for w in wpages_r_list], jnp.int32)
         if not hasattr(self, "_broadcast_jit"):
             self._broadcast_jit = {}
@@ -413,21 +582,3 @@ class PagedExecutor:
             jnp.asarray(list(adapter_ids), jnp.int32),
             jnp.asarray(bt_b, jnp.int32), wb, wr,
             chunk=chunk_size, n_agents=len(adapter_ids))
-
-    def prefill_chunk(self, tokens, start, adapter_id, bt_b, bt_r,
-                      wpages_b, wpages_r, chunk_size, temp=0.0, top_k=0,
-                      top_p=1.0, seed=0, spos=0):
-        n = len(tokens)
-        pad = chunk_size - n
-        toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
-        wb = jnp.asarray(list(wpages_b) + [self.dump_page] * pad, jnp.int32)
-        wr = jnp.asarray(list(wpages_r) + [self.dump_page] * pad, jnp.int32)
-        self.pools, next_tok, logits = self._prefill(
-            self.pools, toks, jnp.asarray(start, jnp.int32),
-            jnp.asarray(n, jnp.int32), jnp.asarray(adapter_id, jnp.int32),
-            jnp.asarray(bt_b, jnp.int32), jnp.asarray(bt_r, jnp.int32),
-            wb, wr, jnp.asarray(temp, jnp.float32),
-            jnp.asarray(top_k, jnp.int32), jnp.asarray(top_p, jnp.float32),
-            jnp.asarray(seed, jnp.int32), jnp.asarray(spos, jnp.int32),
-            chunk=chunk_size, sampled=temp > 0)
-        return int(next_tok), logits

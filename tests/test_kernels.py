@@ -179,16 +179,9 @@ def test_rg_lru_matches_oracle(bsz, s, w, bs, bw, dtype):
 # --------------------------------------------------------------------------
 # Paged ResidualAttention decode (block tables via scalar prefetch)
 # --------------------------------------------------------------------------
-@pytest.mark.parametrize("bsz,hq,hkv,d,r,page,npages,pool", [
-    (3, 8, 2, 64, 16, 16, 8, 64),
-    (2, 4, 4, 128, 8, 32, 4, 32),     # MHA, bigger pages
-])
-def test_paged_decode_matches_dense_oracle(bsz, hq, hkv, d, r, page,
-                                           npages, pool):
-    from repro.kernels.paged_residual_attention import (
-        paged_residual_attention_decode)
-    s = npages * page
-    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+def make_paged_inputs(key, *, bsz, hq, hkv, d, r, page, npages, pool,
+                      kv_len=None):
+    ks = jax.random.split(key, 8)
     kb_pool = jax.random.normal(ks[0], (pool, page, hkv, d))
     vb_pool = jax.random.normal(ks[1], (pool, page, hkv, d))
     kr_pool = jax.random.normal(ks[2], (pool, page, r)) * 0.3
@@ -199,19 +192,125 @@ def test_paged_decode_matches_dense_oracle(bsz, hq, hkv, d, r, page,
     perm = np.stack([np.random.default_rng(i).permutation(pool)[:npages]
                      for i in range(bsz)])
     bt = jnp.asarray(perm, jnp.int32)
-    kv_len = jnp.asarray([s] + [max(1, s // (i + 2)) for i in range(bsz - 1)],
-                         jnp.int32)
-    got = paged_residual_attention_decode(
-        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
-        scale=d ** -0.5, interpret=True)
+    s = npages * page
+    if kv_len is None:
+        kv_len = [s] + [max(1, s // (i + 2)) for i in range(bsz - 1)]
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    return q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len
+
+
+def paged_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v,
+                       bt, kv_len, *, use_rope=True):
+    bsz, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    s = bt.shape[1] * page
+    r = kr_pool.shape[-1]
     kb = kb_pool[bt].reshape(bsz, s, hkv, d)
     vb = vb_pool[bt].reshape(bsz, s, hkv, d)
     kr = kr_pool[bt].reshape(bsz, s, r)
     vr = vr_pool[bt].reshape(bsz, s, r)
     pos = jnp.broadcast_to(jnp.arange(s), (bsz, s))
-    sin, cos = rope_lib.rope_sincos(pos, d)
-    want = ref_mod.residual_attention_ref(
+    if use_rope:
+        sin, cos = rope_lib.rope_sincos(pos, d)
+    else:
+        sin = jnp.zeros(pos.shape + (d // 2,), jnp.float32)
+        cos = jnp.ones(pos.shape + (d // 2,), jnp.float32)
+    return ref_mod.residual_attention_ref(
         q[:, None], kb, vb, kr, vr, b_k, b_v, sin, cos,
         qpos=(kv_len - 1)[:, None], kv_len=kv_len, scale=d ** -0.5)[:, 0]
+
+
+@pytest.mark.parametrize("bsz,hq,hkv,d,r,page,npages,pool", [
+    (3, 8, 2, 64, 16, 16, 8, 64),     # GQA group 4
+    (2, 4, 4, 128, 8, 32, 4, 32),     # MHA, bigger pages, rank 8
+])
+def test_paged_decode_matches_dense_oracle(bsz, hq, hkv, d, r, page,
+                                           npages, pool):
+    from repro.kernels.paged_residual_attention import (
+        paged_residual_attention_decode)
+    inp = make_paged_inputs(jax.random.PRNGKey(0), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len = inp
+    got = paged_residual_attention_decode(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        scale=d ** -0.5, interpret=True)
+    want = paged_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                              b_k, b_v, bt, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bsz,hq,hkv,d,r,use_rope", [
+    (2, 8, 1, 64, 16, True),          # MQA, group 8
+    (2, 12, 4, 64, 8, True),          # GQA group 3, small rank
+    (2, 8, 2, 64, 32, True),          # GQA group 4, large rank
+    (2, 8, 2, 64, 16, False),         # RoPE disabled (whisper-style)
+])
+def test_paged_dispatcher_backends_agree(bsz, hq, hkv, d, r, use_rope):
+    """ops.paged_residual_attention: the Pallas kernel (interpret) and the
+    XLA gather mirror must agree — the serving executor swaps between them
+    with one flag, so they must be interchangeable."""
+    from repro.kernels import ops as kernel_ops
+    page, npages, pool = 16, 4, 32
+    inp = make_paged_inputs(jax.random.PRNGKey(1), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len = inp
+    kw = dict(scale=d ** -0.5, use_rope=use_rope)
+    got = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        backend="pallas", interpret=True, **kw)
+    want = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        backend="ref", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    oracle = paged_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                b_k, b_v, bt, kv_len, use_rope=use_rope)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_base_only_variant():
+    """Base-only kernel == disaggregated kernel with zero residuals ==
+    ref backend with kr_pool=None (unified caches / no-LoRA requests)."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.paged_residual_attention import (
+        paged_attention_decode_base, paged_residual_attention_decode)
+    bsz, hq, hkv, d, r, page, npages, pool = 3, 8, 2, 64, 16, 16, 4, 32
+    inp = make_paged_inputs(jax.random.PRNGKey(2), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len = inp
+    got = paged_attention_decode_base(q, kb_pool, vb_pool, bt, kv_len,
+                                      scale=d ** -0.5, interpret=True)
+    want_ref = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, None, None, None, None, bt, None, kv_len,
+        backend="ref", scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
+                               rtol=2e-5, atol=2e-5)
+    z = jnp.zeros_like(kr_pool)
+    want_zero = paged_residual_attention_decode(
+        q, kb_pool, vb_pool, z, z, jnp.zeros_like(b_k), jnp.zeros_like(b_v),
+        bt, bt, kv_len, scale=d ** -0.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_zero),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_ragged_kv_len_page_skip():
+    """Per-request page skipping: rows whose kv_len covers 1 page out of a
+    wide table (the clamped index maps + pl.when guard) must still match
+    the oracle exactly — including the kv_len=1 degenerate row."""
+    from repro.kernels.paged_residual_attention import (
+        paged_residual_attention_decode)
+    bsz, hq, hkv, d, r, page, npages, pool = 4, 4, 2, 64, 16, 16, 8, 64
+    s = npages * page
+    inp = make_paged_inputs(jax.random.PRNGKey(3), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool,
+                            kv_len=[1, page, page + 3, s])
+    q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len = inp
+    got = paged_residual_attention_decode(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        scale=d ** -0.5, interpret=True)
+    want = paged_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                              b_k, b_v, bt, kv_len)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
