@@ -12,7 +12,7 @@ import sys
 import time
 
 SECTIONS = ("memory", "throughput", "internals", "quality", "sensitivity",
-            "kernel", "roofline", "tiering", "decode")
+            "kernel", "roofline", "tiering", "decode", "prefill")
 
 
 def main() -> None:

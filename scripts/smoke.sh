@@ -55,4 +55,17 @@ assert rep["rows"], "empty benchmark report"
 assert all(r["us_per_decode_step"] > 0 for r in rep["rows"])
 print("bench smoke OK:", rep["summary"])
 PY
+
+echo "== prefill benchmark smoke (page-native vs gather, DESIGN.md §13) =="
+python -m benchmarks.bench_prefill --smoke --out BENCH_prefill.smoke.json
+test -s BENCH_prefill.smoke.json
+python - <<'PY'
+import json
+rep = json.load(open("BENCH_prefill.smoke.json"))
+assert rep["rows"], "empty benchmark report"
+assert all(r["us_per_prompt_token"] > 0 for r in rep["rows"])
+assert all(r["fallback_gather_calls"] == 0 for r in rep["rows"]
+           if r["path"] == "paged"), "paged prefill fell back to gather"
+print("prefill bench smoke OK:", rep["summary"])
+PY
 echo "smoke OK"

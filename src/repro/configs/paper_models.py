@@ -19,10 +19,19 @@ QWEN25_14B = ModelConfig(
     lora=LoRAConfig(rank=16), scan_layers=True, citation="Qwen2.5")
 
 
-def tiny_serving_model(rank: int = 16) -> ModelConfig:
-    """Small llama-family model for the CPU serving engine / benchmarks."""
+def tiny_serving_model(rank: int = 16, *, sliding_window: int = 0,
+                       num_heads: int = 8, num_kv_heads: int = 4,
+                       num_layers: int = 4, d_model: int = 256,
+                       vocab_size: int = 1024) -> ModelConfig:
+    """Small llama-family model for the CPU serving engine / benchmarks.
+
+    The attention-flavour knobs (MHA/GQA/MQA via head counts, SWA via
+    ``sliding_window``) exist for the cross-mode parity matrix
+    (tests/test_parity_matrix.py); the defaults are the historical
+    serve-tiny shape."""
     return ModelConfig(
-        name="serve-tiny", family="dense", num_layers=4, d_model=256,
-        num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=1024,
-        dtype="float32", lora=LoRAConfig(rank=rank), scan_layers=True,
-        remat=False)
+        name="serve-tiny", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=num_heads, num_kv_heads=num_kv_heads,
+        d_ff=2 * d_model, vocab_size=vocab_size, dtype="float32",
+        sliding_window=sliding_window, lora=LoRAConfig(rank=rank),
+        scan_layers=True, remat=False)

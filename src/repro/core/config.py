@@ -226,11 +226,18 @@ class ServeConfig:
     # prefill call; the token budget above is split across the
     # power-of-two-padded batch (0 = no cap beyond the budget)
     max_prefill_batch: int = 8
-    # page-native decode (DESIGN.md §12): hand pools + block tables to the
-    # paged ResidualAttention kernel dispatcher with batch/width bucketing.
-    # False keeps the legacy gather-to-contiguous decode for bit-parity
-    # testing (same tokens, O(B·smax) HBM traffic).
+    # page-native serving (DESIGN.md §12/§13): hand pools + block tables to
+    # the paged ResidualAttention kernel dispatcher — decode AND chunked
+    # prefill — with batch/width bucketing.  Sliding-window (SWA) models
+    # serve through the same kernels (window clamping skips out-of-window
+    # page DMAs).  False keeps the legacy gather-to-contiguous paths for
+    # bit-parity testing (same tokens, O(B·smax) HBM traffic; every such
+    # executor call increments the ``fallback_gather_calls`` metric).
     use_paged_kernel: bool = True
+    # floor for the bucketed block-table width, in pages (decode and
+    # prefill): keeps the compiled-variant count small for short contexts
+    # without giving up the kv_len-proportional HBM scaling.
+    min_table_pages: int = 4
     mode: str = "forkkv"             # forkkv | prefix | full_reuse
     # beyond-paper features (DESIGN.md §9); defaults are paper-faithful.
     broadcast_fork: bool = False

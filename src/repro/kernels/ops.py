@@ -20,13 +20,26 @@ from repro.kernels import residual_attention as ra
 # Unset -> platform-aware: the Pallas kernels on real TPU (the production
 # hot path, DESIGN.md §12), the XLA ref mirror everywhere else (identical
 # numerics, no per-grid-step interpret overhead on CPU).
-_BACKEND = os.environ.get("REPRO_ATTN_BACKEND", "")
+# ``FORKKV_KERNEL_BACKEND`` is the CI-facing alias; its extra value
+# "pallas-interpret" forces the Pallas kernels in interpret mode even off
+# TPU (the backend-matrix CI job runs the parity suite under it).
+_FORCE_INTERPRET = False
+
+
+def _normalize(name: str) -> str:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = name == "pallas-interpret"
+    return "pallas" if _FORCE_INTERPRET else name
+
+
+_BACKEND = _normalize(os.environ.get("REPRO_ATTN_BACKEND", "")
+                      or os.environ.get("FORKKV_KERNEL_BACKEND", ""))
 
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("pallas", "ref"), name
-    _BACKEND = name
+    assert name in ("pallas", "pallas-interpret", "ref"), name
+    _BACKEND = _normalize(name)
 
 
 def get_backend() -> str:
@@ -34,6 +47,15 @@ def get_backend() -> str:
         return _BACKEND
     import jax
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    if _FORCE_INTERPRET:
+        return True
+    import jax
+    return jax.default_backend() != "tpu"
 
 
 def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
@@ -63,6 +85,7 @@ def residual_attention(q, k_base, v_base, k_res, v_res, b_k, b_v, sin, cos,
 def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
                              b_v, bt_b, bt_r, kv_len, *,
                              scale: Optional[float] = None,
+                             window: int = 0,
                              rope_theta: float = 10_000.0,
                              use_rope: bool = True,
                              backend: Optional[str] = None,
@@ -84,7 +107,9 @@ def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
     Pass ``kr_pool=None`` (with ``vr_pool``/``b_k``/``b_v``/``bt_r`` also
     None) for the base-only variant — unified caches or no-LoRA requests.
     ``kv_len`` counts ALL valid tokens incl. the one just written; the
-    query row sits at position ``kv_len - 1``.  Returns (B, Hq, D).
+    query row sits at position ``kv_len - 1``.  ``window > 0`` restricts
+    attention to the trailing ``window`` positions (SWA) and skips the
+    DMAs of out-of-window pages (DESIGN.md §13).  Returns (B, Hq, D).
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
@@ -92,15 +117,54 @@ def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
     if be == "ref":
         return ref_mod.paged_residual_attention_ref(
             q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
-            kv_len, scale=scale, rope_theta=rope_theta, use_rope=use_rope)
-    if interpret is None:
-        import jax
-        interpret = jax.default_backend() != "tpu"
+            kv_len, scale=scale, window=window, rope_theta=rope_theta,
+            use_rope=use_rope)
+    interpret = _resolve_interpret(interpret)
     if kr_pool is None:
         return pra.paged_attention_decode_base(
-            q, kb_pool, vb_pool, bt_b, kv_len, scale=scale,
+            q, kb_pool, vb_pool, bt_b, kv_len, scale=scale, window=window,
             interpret=interpret)
     return pra.paged_residual_attention_decode(
         q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
-        kv_len, scale=scale, rope_theta=rope_theta, use_rope=use_rope,
-        interpret=interpret)
+        kv_len, scale=scale, window=window, rope_theta=rope_theta,
+        use_rope=use_rope, interpret=interpret)
+
+
+def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                     b_k, b_v, bt_b, bt_r, start, kv_len, *,
+                                     scale: Optional[float] = None,
+                                     window: int = 0,
+                                     rope_theta: float = 10_000.0,
+                                     use_rope: bool = True,
+                                     backend: Optional[str] = None,
+                                     interpret: Optional[bool] = None
+                                     ) -> jnp.ndarray:
+    """Chunked-prefill attention over paged pools + block tables
+    (DESIGN.md §13) — the page-native half of the prefill hot path.
+
+    q is a (B, chunk, Hq, D) tile whose K/V the executor has ALREADY
+    written into the pools; KV streams page by page from base+residual
+    pools via the block tables with a causal mask inside the chunk and a
+    running softmax across page steps.  ``start`` (B,) is the absolute
+    position of each chunk's first query row; ``kv_len`` (B,) counts valid
+    tokens including the chunk's writes.  Backends exactly as
+    :func:`paged_residual_attention`; pass ``kr_pool=None`` for the
+    base-only variant.  Returns (B, chunk, Hq, D).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    be = backend or get_backend()
+    if be == "ref":
+        return ref_mod.paged_residual_attention_prefill_ref(
+            q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+            start, kv_len, scale=scale, window=window,
+            rope_theta=rope_theta, use_rope=use_rope)
+    interpret = _resolve_interpret(interpret)
+    if kr_pool is None:
+        return pra.paged_attention_prefill_base(
+            q, kb_pool, vb_pool, bt_b, start, kv_len, scale=scale,
+            window=window, interpret=interpret)
+    return pra.paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+        start, kv_len, scale=scale, window=window, rope_theta=rope_theta,
+        use_rope=use_rope, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Paged ResidualAttention decode kernels (TPU target).
+"""Paged ResidualAttention kernels (TPU target): decode AND prefill.
 
 The serving engine stores the disaggregated cache in page pools addressed by
 block tables.  The dense kernels (residual_attention.py) assume the wrapper
@@ -7,8 +7,8 @@ directly — block tables ride in as scalar-prefetch operands and the
 BlockSpec index maps dereference them, so each grid step DMA's exactly one
 (page × kv_head) tile of bCache + one page of rCache from HBM.  This is the
 Pallas analogue of SGLang's paged RadixAttention fused with ForkKV's
-on-chip reconstruction (paper §5.3), and the production decode path on real
-TPU (DESIGN.md §3, §12).
+on-chip reconstruction (paper §5.3), and the production serving path on
+real TPU (DESIGN.md §3, §12, §13).
 
 Per-request page-count masking: the page axis of the grid is sized for the
 widest request in the batch, but a request with ``kv_len`` tokens only has
@@ -18,7 +18,14 @@ so the Pallas pipeline skips the DMA re-fetch — and (b) skip the softmax
 update entirely under ``pl.when``, so short requests pay FLOPs for their
 own length, not the batch maximum.
 
-Two variants:
+Sliding windows (``window > 0``) clamp the page walk at BOTH ends: leading
+pages entirely outside the attention window of the earliest query row are
+clamped to the first in-window page (same repeated-block-index DMA skip)
+and their FLOPs are skipped too, so a long-context SWA request pays for
+``ceil(window/page) + 1`` trailing pages, not its whole history
+(DESIGN.md §13).
+
+Four variants:
 
 * :func:`paged_residual_attention_decode` — disaggregated (bCache + rCache
   with per-request B_k/B_v up-projections, ForkKV mode).  RoPE for the
@@ -27,6 +34,11 @@ Two variants:
 * :func:`paged_attention_decode_base` — base-only (unified caches: the
   prefix / full_reuse baselines, or ForkKV serving base-model requests
   with no adapter).  Same grid and skip logic, no residual stream.
+* :func:`paged_residual_attention_prefill` — chunked prefill over the same
+  pools: Q is a (chunk) tile per request, KV streams page by page with a
+  causal mask inside the chunk and the running softmax carried across page
+  steps in VMEM scratch.
+* :func:`paged_attention_prefill_base` — base-only chunked prefill.
 """
 from __future__ import annotations
 
@@ -46,10 +58,63 @@ def _last_live_page(kvl, page: int):
     return jnp.maximum(kvl - 1, 0) // page
 
 
+def _first_window_page(qpos_min, page: int, window: int):
+    """Index of the first page intersecting the attention window of the
+    earliest query row (``kpos >= qpos_min - window + 1``).  Only
+    meaningful for ``window > 0``."""
+    return jnp.maximum(qpos_min - (window - 1), 0) // page
+
+
+def _reconstruct_k(kb_ref, kr_ref, bk_ref, j, *, page: int, d: int,
+                   rope_theta: float, use_rope: bool):
+    """In-kernel K reconstruction with deferred RoPE — shared by the
+    disaggregated decode and prefill kernel bodies so a numerics fix can
+    never diverge the two paths: K = K_b + RoPE(K_r B_k), with RoPE
+    computed from the logical position (j·page + offset), no sin/cos
+    tables in HBM.  Returns a (page, D) f32 tile."""
+    k_b = kb_ref[0, :, 0, :].astype(jnp.float32)               # (page, D)
+    k_r = kr_ref[0].astype(jnp.float32)                        # (page, R)
+    b_k = bk_ref[0, 0].astype(jnp.float32)                     # (R, D)
+    k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
+    if use_rope:
+        pos = (j * page + jax.lax.broadcasted_iota(
+            jnp.int32, (page, 1), 0)).astype(jnp.float32)      # (page, 1)
+        half = d // 2
+        freqs = 1.0 / (rope_theta ** (
+            jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) / half))
+        ang = pos * freqs                                      # (page, half)
+        sin, cos = jnp.sin(ang), jnp.cos(ang)
+        x1, x2 = k_lora[:, :half], k_lora[:, half:]
+        k_lora = jnp.concatenate([x1 * cos - x2 * sin,
+                                  x2 * cos + x1 * sin], axis=-1)
+    return k_b + k_lora
+
+
+def _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b,
+                    accr_scr=None, v_r=None):
+    """One online-softmax step over a (rows, page) score tile — the
+    single implementation behind all four kernel bodies.  Rescales the
+    running accumulators by alpha and folds in this page's masked probs;
+    the residual accumulator update is skipped for base-only kernels."""
+    s = jnp.where(mask, s, NEG_INIT)
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * mask
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_b, preferred_element_type=jnp.float32)
+    if accr_scr is not None:
+        accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
+            p, v_r, preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+
 def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
             vr_ref, bk_ref, bv_ref, out_ref, m_scr, l_scr, acc_scr,
-            accr_scr, *, scale: float, page: int, rope_theta: float,
-            use_rope: bool):
+            accr_scr, *, scale: float, page: int, window: int,
+            rope_theta: float, use_rope: bool):
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -64,48 +129,27 @@ def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
         accr_scr[...] = jnp.zeros_like(accr_scr)
 
     # pages past ceil(kv_len/page) contribute nothing: skip their FLOPs
-    # (their DMA is already skipped by the clamped index maps)
-    @pl.when(j * page < kvlen)
-    def _compute():
-        # ---- on-the-fly K reconstruction with in-kernel deferred RoPE ----
-        k_b = kb_ref[0, :, 0, :].astype(jnp.float32)           # (page, D)
-        k_r = kr_ref[0].astype(jnp.float32)                    # (page, R)
-        b_k = bk_ref[0, 0].astype(jnp.float32)                 # (R, D)
-        k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
-        if use_rope:
-            pos = (j * page + jax.lax.broadcasted_iota(
-                jnp.int32, (page, 1), 0)).astype(jnp.float32)  # (page, 1)
-            half = d // 2
-            freqs = 1.0 / (rope_theta ** (
-                jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) / half))
-            ang = pos * freqs                                  # (page, half)
-            sin, cos = jnp.sin(ang), jnp.cos(ang)
-            x1, x2 = k_lora[:, :half], k_lora[:, half:]
-            k_lora = jnp.concatenate([x1 * cos - x2 * sin,
-                                      x2 * cos + x1 * sin], axis=-1)
-        k = k_b + k_lora
+    # (their DMA is already skipped by the clamped index maps).  With a
+    # sliding window the query sits at kvlen-1, so pages entirely before
+    # kvlen - window are dead too (their DMA repeats the first in-window
+    # page and is likewise skipped).
+    live = j * page < kvlen
+    if window > 0:
+        live = live & ((j + 1) * page > kvlen - window)
 
-        # ---- scores + online softmax with dual accumulators --------------
+    @pl.when(live)
+    def _compute():
+        k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
+                           rope_theta=rope_theta, use_rope=use_rope)
         q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         mask = kpos < kvlen
-        s = jnp.where(mask, s, NEG_INIT)
-
-        m_prev = m_scr[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new) * mask
-        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-
-        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
-        v_r = vr_ref[0].astype(jnp.float32)
-        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-            p, v_b, preferred_element_type=jnp.float32)
-        accr_scr[...] = accr_scr[...] * alpha + jnp.dot(
-            p, v_r, preferred_element_type=jnp.float32)
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        if window > 0:
+            mask = mask & (kpos > kvlen - 1 - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32),
+                        accr_scr, vr_ref[0].astype(jnp.float32))
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -116,11 +160,24 @@ def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
         out_ref[0, 0] = (acc / l).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "rope_theta",
+def _decode_page_clamp(page: int, window: int):
+    """Index-map page clamp for decode: dead grid steps repeat a live
+    page's block index so the Pallas pipeline skips their DMA.  Trailing
+    steps clamp to the last live page; with a sliding window, leading
+    steps clamp to the first in-window page."""
+    def clamp(j, kvl):
+        jc = jnp.minimum(j, _last_live_page(kvl, page))
+        if window > 0:
+            jc = jnp.maximum(jc, _first_window_page(kvl - 1, page, window))
+        return jc
+    return clamp
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "rope_theta",
                                              "use_rope", "interpret"))
 def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                     b_k, b_v, bt_b, bt_r, kv_len, *,
-                                    scale: float,
+                                    scale: float, window: int = 0,
                                     rope_theta: float = 10_000.0,
                                     use_rope: bool = True,
                                     interpret: bool = True):
@@ -131,7 +188,8 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
     kr/vr:    (Pr, page, R)      residual pools (no RoPE, scaled)
     b_k/b_v:  (B, R, Hkv*D)      per-request up-projections
     bt_b/bt_r:(B, n_pages) int32 block tables (logical page -> pool page)
-    kv_len:   (B,) valid tokens.  Returns (B, Hq, D).
+    kv_len:   (B,) valid tokens; ``window > 0`` restricts attention to the
+    trailing ``window`` positions (SWA).  Returns (B, Hq, D).
     """
     bsz, hq, d = q.shape
     page, hkv = kb_pool.shape[1], kb_pool.shape[2]
@@ -144,18 +202,16 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
     bvt = b_v.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
 
     kernel = functools.partial(_kernel, scale=scale, page=page,
-                               rope_theta=rope_theta, use_rope=use_rope)
+                               window=window, rope_theta=rope_theta,
+                               use_rope=use_rope)
 
-    # clamp dead grid steps to the request's last live page: the block
-    # index repeats, so the pipeline skips the DMA instead of prefetching
-    # padding pages the kernel would only mask away
+    clamp = _decode_page_clamp(page, window)
+
     def _b_map(b, h, j, btb, btr, kvl):
-        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
-        return (btb[b, jc], 0, h, 0)
+        return (btb[b, clamp(j, kvl[b])], 0, h, 0)
 
     def _r_map(b, h, j, btb, btr, kvl):
-        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
-        return (btr[b, jc], 0, 0)
+        return (btr[b, clamp(j, kvl[b])], 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -196,7 +252,8 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
 # Base-only variant (unified caches / no-LoRA requests)
 # --------------------------------------------------------------------------
 def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
-                 m_scr, l_scr, acc_scr, *, scale: float, page: int):
+                 m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                 window: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -208,26 +265,21 @@ def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(j * page < kvlen)
+    live = j * page < kvlen
+    if window > 0:
+        live = live & ((j + 1) * page > kvlen - window)
+
+    @pl.when(live)
     def _compute():
         k = kb_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
         q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         mask = kpos < kvlen
-        s = jnp.where(mask, s, NEG_INIT)
-
-        m_prev = m_scr[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new) * mask
-        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-
-        v = vb_ref[0, :, 0, :].astype(jnp.float32)
-        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
-            p, v, preferred_element_type=jnp.float32)
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        if window > 0:
+            mask = mask & (kpos > kvlen - 1 - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32))
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -235,9 +287,10 @@ def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
         out_ref[0, 0] = (acc_scr[...] / l).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
 def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
-                                scale: float, interpret: bool = True):
+                                scale: float, window: int = 0,
+                                interpret: bool = True):
     """Base-only paged decode: attention over the bCache pool alone.
 
     Serves the unified-cache baselines (prefix / full_reuse) and ForkKV
@@ -253,11 +306,12 @@ def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
     n_pages = bt_b.shape[1]
     qt = q.reshape(bsz, hkv, g, d)
 
-    kernel = functools.partial(_kernel_base, scale=scale, page=page)
+    kernel = functools.partial(_kernel_base, scale=scale, page=page,
+                               window=window)
+    clamp = _decode_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, kvl):
-        jc = jnp.minimum(j, _last_live_page(kvl[b], page))
-        return (btb[b, jc], 0, h, 0)
+        return (btb[b, clamp(j, kvl[b])], 0, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -284,3 +338,242 @@ def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
     )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kb_pool,
       vb_pool)
     return out.reshape(bsz, hq, d)
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill variants (Q is a chunk tile, KV streams from the pools)
+# --------------------------------------------------------------------------
+def _prefill_page_clamp(page: int, window: int):
+    """Index-map page clamp for prefill: trailing dead steps repeat the last
+    live page; with a sliding window, leading steps repeat the first page
+    that intersects the EARLIEST query row's window (``start``)."""
+    def clamp(j, kvl, st):
+        jc = jnp.minimum(j, _last_live_page(kvl, page))
+        if window > 0:
+            jc = jnp.maximum(jc, _first_window_page(st, page, window))
+        return jc
+    return clamp
+
+
+def _kernel_prefill(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, q_ref, kb_ref,
+                    vb_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref, m_scr,
+                    l_scr, acc_scr, accr_scr, *, scale: float, page: int,
+                    window: int, rope_theta: float, use_rope: bool):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g, chunk, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = g * chunk
+    kvlen = kvlen_ref[b]        # valid tokens INCLUDING this chunk's writes
+    start = start_ref[b]        # absolute position of the chunk's first row
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accr_scr[...] = jnp.zeros_like(accr_scr)
+
+    # dead pages: past the last live page, or (SWA) entirely before the
+    # earliest query row's window.  Their DMA is skipped by the clamped
+    # index maps; skip their FLOPs here.
+    live = j * page < kvlen
+    if window > 0:
+        live = live & ((j + 1) * page > start - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
+                           rope_theta=rope_theta, use_rope=use_rope)
+        # causal chunk scores; the online softmax carries across page steps
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)   # (G*chunk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rowpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = (kpos < kvlen) & (kpos <= rowpos)
+        if window > 0:
+            mask = mask & (kpos > rowpos - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32),
+                        accr_scr, vr_ref[0].astype(jnp.float32))
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        b_v = bv_ref[0, 0].astype(jnp.float32)
+        acc = acc_scr[...] + jnp.dot(accr_scr[...], b_v,
+                                     preferred_element_type=jnp.float32)
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        out_ref[0, 0] = (acc / l).reshape(g, chunk, d).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "rope_theta",
+                                             "use_rope", "interpret"))
+def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                     b_k, b_v, bt_b, bt_r, start, kv_len, *,
+                                     scale: float, window: int = 0,
+                                     rope_theta: float = 10_000.0,
+                                     use_rope: bool = True,
+                                     interpret: bool = True):
+    """Chunked prefill over paged disaggregated caches (DESIGN.md §13).
+
+    The chunk's own K/V must already be written into the pools (the
+    executor writes before attending), so the causal mask inside the chunk
+    is pure masking — no separate self-attention pass.
+
+    q:        (B, chunk, Hq, D) RoPE'd queries
+    kb/vb:    (P,  page, Hkv, D) base pools;  kr/vr: (Pr, page, R)
+    b_k/b_v:  (B, R, Hkv*D) per-request up-projections
+    bt_b/bt_r:(B, n_pages) block tables
+    start:    (B,) absolute position of each chunk's first query row
+    kv_len:   (B,) valid tokens incl. this chunk's writes (= start+n_valid;
+              rows past kv_len-1 are padding and produce garbage rows the
+              caller must ignore).  Returns (B, chunk, Hq, D).
+    """
+    bsz, sq, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    g = hq // hkv
+    r = kr_pool.shape[-1]
+    n_pages = bt_b.shape[1]
+    rows = g * sq
+
+    qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+    bvt = b_v.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel_prefill, scale=scale, page=page,
+                               window=window, rope_theta=rope_theta,
+                               use_rope=use_rope)
+    clamp = _prefill_page_clamp(page, window)
+
+    def _b_map(b, h, j, btb, btr, kvl, st):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
+
+    def _r_map(b, h, j, btb, btr, kvl, st):
+        return (btr[b, clamp(j, kvl[b], st[b])], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bsz, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, sq, d),
+                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, r), _r_map),
+            pl.BlockSpec((1, page, r), _r_map),
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, sq, d),
+            lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, r), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
+        interpret=interpret,
+    )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
+      kv_len.astype(jnp.int32), start.astype(jnp.int32), qt, kb_pool,
+      vb_pool, kr_pool, vr_pool, bkt, bvt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
+
+
+def _kernel_prefill_base(bt_b_ref, kvlen_ref, start_ref, q_ref, kb_ref,
+                         vb_ref, out_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, page: int, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g, chunk, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = g * chunk
+    kvlen = kvlen_ref[b]
+    start = start_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    live = j * page < kvlen
+    if window > 0:
+        live = live & ((j + 1) * page > start - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        k = kb_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rowpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = (kpos < kvlen) & (kpos <= rowpos)
+        if window > 0:
+            mask = mask & (kpos > rowpos - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32))
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        out_ref[0, 0] = (acc_scr[...] / l).reshape(
+            g, chunk, d).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
+                                 scale: float, window: int = 0,
+                                 interpret: bool = True):
+    """Base-only chunked prefill: unified caches / no-LoRA requests, and
+    the broadcast-fork base trajectory.  Shapes as the disaggregated
+    variant minus the residual stream.  Returns (B, chunk, Hq, D)."""
+    bsz, sq, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    g = hq // hkv
+    n_pages = bt_b.shape[1]
+    rows = g * sq
+    qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+
+    kernel = functools.partial(_kernel_prefill_base, scale=scale, page=page,
+                               window=window)
+    clamp = _prefill_page_clamp(page, window)
+
+    def _b_map(b, h, j, btb, kvl, st):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, sq, d),
+                         lambda b, h, j, btb, kvl, st: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, sq, d),
+            lambda b, h, j, btb, kvl, st: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
+        interpret=interpret,
+    )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32),
+      start.astype(jnp.int32), qt, kb_pool, vb_pool)
+    return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)

@@ -39,9 +39,44 @@ def reconstruct(k_base, v_base, k_res, v_res, b_k, b_v, sin, cos):
     return k.astype(k_base.dtype), v.astype(v_base.dtype)
 
 
+def _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v,
+                     bt_b, bt_r, *, rope_theta: float, use_rope: bool):
+    """Gather block-table pages into contiguous (B, Sk, ...) views and, for
+    the disaggregated layout, reconstruct full K/V.  Shared by the paged
+    decode and prefill oracles."""
+    bsz, d = q.shape[0], q.shape[-1]
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    sk = bt_b.shape[1] * page
+    kb = kb_pool[bt_b].reshape(bsz, sk, hkv, d)
+    vb = vb_pool[bt_b].reshape(bsz, sk, hkv, d)
+    if kr_pool is None:
+        return kb, vb
+    kr = kr_pool[bt_r].reshape(bsz, sk, -1)
+    vr = vr_pool[bt_r].reshape(bsz, sk, -1)
+    kpos = jnp.broadcast_to(jnp.arange(sk), (bsz, sk))
+    if use_rope:
+        sin, cos = rope_lib.rope_sincos(kpos, d, rope_theta)
+    else:
+        sin = jnp.zeros(kpos.shape + (d // 2,), jnp.float32)
+        cos = jnp.ones(kpos.shape + (d // 2,), jnp.float32)
+    return reconstruct(kb, vb, kr, vr, b_k, b_v,
+                       sin.astype(q.dtype), cos.astype(q.dtype))
+
+
+def _masked_softmax_attention(q, k, v, mask, scale):
+    """Numerically-stable masked attention.  q: (B, Sq, Hq, D);
+    k/v: (B, Sk, Hkv, D); mask: broadcastable to (B, Hq, Sq, Sk)."""
+    s = attn_lib._gqa_scores(q, k) * scale
+    s = jnp.where(mask, s, attn_lib.NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    return attn_lib._gqa_out(p, v).astype(q.dtype)
+
+
 def paged_residual_attention_ref(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                  b_k, b_v, bt_b, bt_r, kv_len, *,
                                  scale: Optional[float] = None,
+                                 window: int = 0,
                                  rope_theta: float = 10_000.0,
                                  use_rope: bool = True) -> jnp.ndarray:
     """XLA mirror of the paged decode kernels: gather the block-table pages
@@ -57,37 +92,57 @@ def paged_residual_attention_ref(q, kb_pool, vb_pool, kr_pool, vr_pool,
 
     q: (B, Hq, D); kb/vb: (P, page, Hkv, D); kr/vr: (Pr, page, R) or None;
     b_k/b_v: (B, R, Hkv*D) or None; bt_b/bt_r: (B, W); kv_len: (B,) —
-    the query row sits at position ``kv_len - 1``.  Returns (B, Hq, D).
+    the query row sits at position ``kv_len - 1``; ``window > 0`` keeps
+    only the trailing ``window`` positions (SWA).  Returns (B, Hq, D).
     """
     bsz, hq, d = q.shape
-    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
-    sk = bt_b.shape[1] * page
+    sk = bt_b.shape[1] * kb_pool.shape[1]
     if scale is None:
         scale = d ** -0.5
-    kb = kb_pool[bt_b].reshape(bsz, sk, hkv, d)
-    vb = vb_pool[bt_b].reshape(bsz, sk, hkv, d)
-    if kr_pool is None:
-        k, v = kb, vb
-    else:
-        kr = kr_pool[bt_r].reshape(bsz, sk, -1)
-        vr = vr_pool[bt_r].reshape(bsz, sk, -1)
-        kpos = jnp.broadcast_to(jnp.arange(sk), (bsz, sk))
-        if use_rope:
-            sin, cos = rope_lib.rope_sincos(kpos, d, rope_theta)
-        else:
-            sin = jnp.zeros(kpos.shape + (d // 2,), jnp.float32)
-            cos = jnp.ones(kpos.shape + (d // 2,), jnp.float32)
-        k, v = reconstruct(kb, vb, kr, vr, b_k, b_v,
-                           sin.astype(q.dtype), cos.astype(q.dtype))
-    s = attn_lib._gqa_scores(q[:, None], k) * scale     # (B, Hq, 1, Sk)
+    k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
+                            b_v, bt_b, bt_r, rope_theta=rope_theta,
+                            use_rope=use_rope)
     kp = jnp.arange(sk)[None, None, None, :]
     # the query sits at kv_len - 1, so the causal bound and the validity
     # bound coincide: one mask term covers both
-    mask = kp < kv_len[:, None, None, None]
-    s = jnp.where(mask, s, attn_lib.NEG_INF)
-    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
-    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
-    return attn_lib._gqa_out(p, v).astype(q.dtype)[:, 0]
+    kvl = kv_len[:, None, None, None]
+    mask = kp < kvl
+    if window > 0:
+        mask = mask & (kp > kvl - 1 - window)
+    return _masked_softmax_attention(q[:, None], k, v, mask, scale)[:, 0]
+
+
+def paged_residual_attention_prefill_ref(q, kb_pool, vb_pool, kr_pool,
+                                         vr_pool, b_k, b_v, bt_b, bt_r,
+                                         start, kv_len, *,
+                                         scale: Optional[float] = None,
+                                         window: int = 0,
+                                         rope_theta: float = 10_000.0,
+                                         use_rope: bool = True
+                                         ) -> jnp.ndarray:
+    """XLA mirror of the paged chunked-prefill kernels (DESIGN.md §13):
+    gather block-table pages into contiguous views, reconstruct (disagg)
+    and attend with the causal-within-chunk + window + validity mask.
+
+    q: (B, chunk, Hq, D); start: (B,) absolute position of each chunk's
+    first query row; kv_len: (B,) valid tokens incl. the chunk's writes.
+    Pass ``kr_pool=None`` for the base-only variant.
+    Returns (B, chunk, Hq, D).
+    """
+    bsz, sq, hq, d = q.shape
+    sk = bt_b.shape[1] * kb_pool.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
+                            b_v, bt_b, bt_r, rope_theta=rope_theta,
+                            use_rope=use_rope)
+    qpos = start[:, None] + jnp.arange(sq)[None]          # (B, Sq)
+    qp = qpos[:, None, :, None]
+    kp = jnp.arange(sk)[None, None, None, :]
+    mask = (kp <= qp) & (kp < kv_len[:, None, None, None])
+    if window > 0:
+        mask = mask & (kp > qp - window)
+    return _masked_softmax_attention(q, k, v, mask, scale)
 
 
 def residual_attention_ref(q, k_base, v_base, k_res, v_res, b_k, b_v,

@@ -129,13 +129,14 @@ def main() -> None:
                   f"preemptions={rep['preemptions']}")
         if args.stats:
             per_step = rep["decode_ms"] / max(1, rep["decode_steps"])
-            print(f"decode={'paged' if rep['use_paged_kernel'] else 'gather'}"
+            print(f"kernels={'paged' if rep['use_paged_kernel'] else 'gather'}"
                   f" prefill_ms={rep['prefill_ms']:.1f} "
                   f"decode_ms={rep['decode_ms']:.1f} "
                   f"sync_ms={rep['sync_ms']:.1f} "
                   f"decode_steps={rep['decode_steps']} "
                   f"decode_ms_per_step={per_step:.2f} "
-                  f"decode_jit_variants={rep['decode_jit_variants']}")
+                  f"decode_jit_variants={rep['decode_jit_variants']} "
+                  f"fallback_gather_calls={rep['fallback_gather_calls']}")
 
 
 if __name__ == "__main__":

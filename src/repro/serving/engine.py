@@ -656,4 +656,8 @@ class Engine:
             "decode_steps": len(self.decode_batch_hist),
             "decode_jit_variants": self.executor.decode_cache_size(),
             "use_paged_kernel": self.executor.use_paged,
+            # executor calls that took a legacy gather-to-contiguous path
+            # (0 whenever use_paged_kernel=True — regression-gated by the
+            # parity matrix, DESIGN.md §13)
+            "fallback_gather_calls": self.executor.fallback_gather_calls,
         }

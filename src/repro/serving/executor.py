@@ -5,17 +5,23 @@ address them through block tables.  In ForkKV mode two pools exist — the
 shared bCache pool and the per-agent rCache pool — and attention runs over
 the disaggregated layout.
 
-Decode is page-native (DESIGN.md §12): the jitted step hands the pools and
-per-request block tables straight to the ``paged_residual_attention``
-dispatcher (``kernels/ops.py``) — the Pallas kernel on TPU, its XLA gather
-mirror elsewhere — so HBM traffic scales with each request's actual
-``kv_len`` instead of the engine-wide ``smax``.  The legacy
-gather-to-contiguous path survives behind ``ServeConfig.use_paged_kernel
-= False`` for bit-parity testing.  Compiled shapes are bucketed: the
-decode batch pads to the next power of two (capped at ``max_batch``) and
-the paged block-table width to the next power of two of the batch's live
-page count, so the number of compiled decode variants stays logarithmic
-under fluctuating load instead of retracing per batch size.
+Decode AND prefill are page-native (DESIGN.md §12/§13): the jitted steps
+hand the pools and per-request block tables straight to the
+``paged_residual_attention`` / ``paged_residual_attention_prefill``
+dispatchers (``kernels/ops.py``) — the Pallas kernels on TPU, their XLA
+gather mirrors elsewhere — so HBM traffic scales with each request's
+actual ``kv_len`` instead of the engine-wide ``smax``.  Sliding-window
+models run through the same kernels (the page walk clamps to the trailing
+``ceil(window/page)+1`` pages).  The legacy gather-to-contiguous paths
+survive behind ``ServeConfig.use_paged_kernel = False`` for bit-parity
+testing; every executor call that takes them increments
+``fallback_gather_calls`` so any remaining fallback is visible in
+``Engine.metrics()``.  Compiled shapes are bucketed: batches pad to the
+next power of two (capped at ``max_batch`` / the prefill plan) and paged
+block-table widths to the next power of two of the batch's live page
+count (floor ``ServeConfig.min_table_pages``), so the number of compiled
+variants stays logarithmic under fluctuating load instead of retracing
+per batch size.
 
 Prefill is batched: ``prefill_batch`` packs several requests' chunks into
 one padded ``(B, chunk)`` call (the engine schedules co-resident chunks
@@ -42,10 +48,6 @@ from repro.models import transformer as tfm
 from repro.serving.sampling import sample_tokens
 
 Params = Dict
-
-# floor for the bucketed block-table width (pages): keeps the variant count
-# small for short contexts without giving up the kv_len-proportional scaling
-MIN_TABLE_PAGES = 4
 
 
 def _pow2(n: int) -> int:
@@ -95,11 +97,15 @@ class PagedExecutor:
         self.page = serve_cfg.page_size
         self.max_pages_per_req = max_pages_per_req
         self.smax = max_pages_per_req * self.page
-        # paged decode: pools + block tables straight into the kernel
-        # dispatcher.  The paged kernels have no sliding-window support yet,
-        # so SWA models keep the gather path regardless of the flag.
-        self.use_paged = serve_cfg.use_paged_kernel \
-            and cfg.sliding_window == 0
+        # page-native serving: pools + block tables straight into the
+        # kernel dispatchers for decode AND chunked prefill; SWA models
+        # run the same kernels with window-clamped page walks (§13).
+        self.use_paged = serve_cfg.use_paged_kernel
+        self.min_table_pages = serve_cfg.min_table_pages
+        # executor calls that took a legacy gather-to-contiguous path —
+        # the acceptance probe for "zero gather copies" (0 whenever
+        # use_paged_kernel=True; surfaced via Engine.metrics())
+        self.fallback_gather_calls = 0
         res_factor = max(1, cfg.kv_dim // max(cfg.lora.rank, 1))             if self.disagg else 1
         self.num_res_pages = serve_cfg.max_pages * res_factor             if self.disagg else serve_cfg.max_pages
         self.pools = make_pools(cfg, serve_cfg.max_pages,
@@ -221,6 +227,14 @@ class PagedExecutor:
         bt = list(pages)[:width]
         return bt + [dump] * (width - len(bt))
 
+    def _bucket_width(self, need: int) -> int:
+        """Block-table width bucket for a batch needing ``need`` live
+        pages: next power of two, floor ``min_table_pages``, capped at
+        ``max_pages_per_req`` — shared by decode and prefill shapes."""
+        return min(self.max_pages_per_req,
+                   max(min(self.min_table_pages, self.max_pages_per_req),
+                       _pow2(need)))
+
     # ------------------------------------------------------------- decode
     def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
                    bt_r, wpage_b, wpage_r, woff, temps, top_ks, top_ps,
@@ -267,6 +281,7 @@ class PagedExecutor:
                     bv if self.disagg else None,
                     bt_b, bt_r if self.disagg else None, kv_len + 1,
                     scale=cfg.resolved_head_dim ** -0.5,
+                    window=cfg.sliding_window,
                     rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
             else:
                 # legacy: gather this request's pages -> contiguous view
@@ -316,12 +331,11 @@ class PagedExecutor:
         assert bsz <= self.sc.max_batch, (bsz, self.sc.max_batch)
         bpad = min(_pow2(bsz), self.sc.max_batch)
         if self.use_paged:
-            need = max(kvl // self.page + 1 for kvl in kv_len)
-            width = min(self.max_pages_per_req,
-                        max(min(MIN_TABLE_PAGES, self.max_pages_per_req),
-                            _pow2(need)))
+            width = self._bucket_width(max(kvl // self.page + 1
+                                           for kvl in kv_len))
         else:
             width = self.max_pages_per_req
+            self.fallback_gather_calls += 1
         bt_b = [self._pad_table(p, width, self.dump_page)
                 for p in base_tables]
         bt_r = [self._pad_table(p, width, self.dump_page_r)
@@ -404,22 +418,38 @@ class PagedExecutor:
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
             new_pools = Pools(kbp, vbp, krp, vrp)
-            kc = kbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
-            vc = vbp[li][bt_b].reshape(bsz, self.smax, cfg.num_kv_heads, -1)
-            if self.disagg:
-                krc = krp[li][bt_r].reshape(bsz, self.smax, -1)
-                vrc = vrp[li][bt_r].reshape(bsz, self.smax, -1)
-                bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
-                bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
+            if self.use_paged:
+                # page-native prefill (§13): the chunk's K/V is already in
+                # the pools — stream KV page by page via the block tables,
+                # causal mask inside the chunk, no gather-to-contiguous
+                attn = kernel_ops.paged_residual_attention_prefill(
+                    q, kbp[li], vbp[li],
+                    krp[li] if self.disagg else None,
+                    vrp[li] if self.disagg else None,
+                    bk if self.disagg else None,
+                    bv if self.disagg else None,
+                    bt_b, bt_r if self.disagg else None, start,
+                    start + n_valid, scale=cfg.resolved_head_dim ** -0.5,
+                    window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+                    use_rope=cfg.use_rope)
             else:
-                krc = vrc = bk_rows = bv_rows = None
-            kmask_pos = jnp.broadcast_to(jnp.arange(self.smax)[None],
-                                         (bsz, self.smax))
-            attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
-                               kmask_pos, start + n_valid, positions,
-                               cfg.sliding_window,
-                               cfg.resolved_head_dim ** -0.5, cfg,
-                               self.disagg)
+                # legacy: gather every request's pages -> contiguous view
+                w = bt_b.shape[1] * self.page
+                kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                if self.disagg:
+                    krc = krp[li][bt_r].reshape(bsz, w, -1)
+                    vrc = vrp[li][bt_r].reshape(bsz, w, -1)
+                    bk_rows = bk.reshape(bsz, cfg.lora.rank, -1)
+                    bv_rows = bv.reshape(bsz, cfg.lora.rank, -1)
+                else:
+                    krc = vrc = bk_rows = bv_rows = None
+                kmask_pos = jnp.broadcast_to(jnp.arange(w)[None], (bsz, w))
+                attn = tfm._attend(q, kc, vc, krc, vrc, bk_rows, bv_rows,
+                                   kmask_pos, start + n_valid, positions,
+                                   cfg.sliding_window,
+                                   cfg.resolved_head_dim ** -0.5, cfg,
+                                   self.disagg)
             x = x + attn.reshape(bsz, chunk, -1) @ p_l["wo"]
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
@@ -462,7 +492,15 @@ class PagedExecutor:
         top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
         seeds = list(seeds) if seeds is not None else [0] * bsz
         spos = list(spos) if spos is not None else [0] * bsz
-        w = self.max_pages_per_req
+        if self.use_paged:
+            # prefill width bucketing (§13): tables cover the batch's
+            # largest post-chunk kv extent, bucketed like decode widths
+            w = self._bucket_width(max(
+                -(-(starts[i] + len(chunks[i])) // self.page)
+                for i in range(bsz)))
+        else:
+            w = self.max_pages_per_req
+            self.fallback_gather_calls += 1
         toks, nvalid, wb, wr, btb, btr = [], [], [], [], [], []
         for i in range(bpad):
             if i < bsz:
@@ -549,13 +587,24 @@ class PagedExecutor:
             vrp = new_pools.vr.at[li, wp_r, woff[None]].set(vr_)
             new_pools = Pools(kbp, vbp, krp, vrp)
             # attention over base cache only
-            kc = kbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
-            vc = vbp[li][bt_b].reshape(1, self.smax, cfg.num_kv_heads, -1)
-            kmask_pos = jnp.arange(self.smax)[None]
-            attn = tfm._attend(q, kc, vc, None, None, None, None, kmask_pos,
-                               (start + n_valid)[None], positions[None],
-                               cfg.sliding_window,
-                               cfg.resolved_head_dim ** -0.5, cfg, False)
+            if self.use_paged:
+                attn = kernel_ops.paged_residual_attention_prefill(
+                    q, kbp[li], vbp[li], None, None, None, None,
+                    bt_b[None], None, start[None],
+                    (start + n_valid)[None],
+                    scale=cfg.resolved_head_dim ** -0.5,
+                    window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+                    use_rope=cfg.use_rope)
+            else:
+                w = bt_b.shape[0] * self.page
+                kc = kbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
+                vc = vbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
+                kmask_pos = jnp.arange(w)[None]
+                attn = tfm._attend(q, kc, vc, None, None, None, None,
+                                   kmask_pos, (start + n_valid)[None],
+                                   positions[None], cfg.sliding_window,
+                                   cfg.resolved_head_dim ** -0.5, cfg,
+                                   False)
             x = x + attn.reshape(1, chunk, -1) @ p_l["wo"]
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
@@ -565,6 +614,11 @@ class PagedExecutor:
                           wpages_b, wpages_r_list, chunk_size):
         n = len(tokens)
         pad = chunk_size - n
+        if self.use_paged:
+            bt_b = self._pad_table(bt_b, self._bucket_width(
+                -(-(start + n) // self.page)), self.dump_page)
+        else:
+            self.fallback_gather_calls += 1
         toks = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
         wb = jnp.asarray(list(wpages_b) + [self.dump_page] * pad, jnp.int32)
         wr = jnp.asarray([list(w) + [self.dump_page_r] * pad

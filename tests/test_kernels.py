@@ -314,3 +314,150 @@ def test_paged_decode_ragged_kv_len_page_skip():
                               b_k, b_v, bt, kv_len)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Paged chunked-prefill kernels (DESIGN.md §13): ragged chunk/window shapes
+# --------------------------------------------------------------------------
+def paged_prefill_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
+                               b_v, bt, start, kv_len, *, window=0):
+    """Independent oracle: gather pages -> contiguous views -> the dense
+    residual_attention_ref with explicit qpos/kv_len/window masking."""
+    bsz, sq, hq, d = q.shape
+    page = kb_pool.shape[1]
+    s = bt.shape[1] * page
+    r = kr_pool.shape[-1]
+    kb = kb_pool[bt].reshape(bsz, s, kb_pool.shape[2], d)
+    vb = vb_pool[bt].reshape(bsz, s, kb_pool.shape[2], d)
+    kr = kr_pool[bt].reshape(bsz, s, r)
+    vr = vr_pool[bt].reshape(bsz, s, r)
+    pos = jnp.broadcast_to(jnp.arange(s), (bsz, s))
+    sin, cos = rope_lib.rope_sincos(pos, d)
+    qpos = start[:, None] + jnp.arange(sq)[None]
+    return ref_mod.residual_attention_ref(
+        q, kb, vb, kr, vr, b_k, b_v, sin, cos, qpos=qpos, kv_len=kv_len,
+        window=window, scale=d ** -0.5)
+
+
+@pytest.mark.parametrize("sq,starts,window", [
+    (27, (0, 5, 96), 0),       # chunk boundaries straddle pages, ragged
+    (1, (0, 15, 63), 0),       # chunk == 1 degenerate case
+    (16, (3, 48, 100), 5),     # window smaller than one page
+    (24, (0, 20, 70), 24),     # window straddling a page boundary
+])
+def test_paged_prefill_matches_dense_oracle(sq, starts, window):
+    """The chunked-prefill grid (running softmax across page steps, causal
+    mask within the chunk, window-clamped page walk) must match the dense
+    oracle for ragged starts/chunks — including rows mid-page."""
+    from repro.kernels.paged_residual_attention import (
+        paged_residual_attention_prefill)
+    bsz, hq, hkv, d, r, page, npages, pool = len(starts), 8, 2, 64, 16, \
+        16, 8, 64
+    inp = make_paged_inputs(jax.random.PRNGKey(5), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    _, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, _ = inp
+    q = jax.random.normal(jax.random.PRNGKey(6), (bsz, sq, hq, d))
+    start = jnp.asarray(starts, jnp.int32)
+    kv_len = start + sq
+    got = paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, start,
+        kv_len, scale=d ** -0.5, window=window, interpret=True)
+    want = paged_prefill_dense_oracle(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                      b_k, b_v, bt, start, kv_len,
+                                      window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_paged_prefill_dispatcher_backends_agree(window):
+    """ops.paged_residual_attention_prefill: the Pallas kernel (interpret)
+    and the XLA gather mirror must be interchangeable — the serving
+    executor swaps them with one flag."""
+    from repro.kernels import ops as kernel_ops
+    bsz, sq, hq, hkv, d, r, page, npages, pool = 2, 20, 4, 1, 64, 8, 16, \
+        4, 32
+    inp = make_paged_inputs(jax.random.PRNGKey(7), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    _, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, _ = inp
+    q = jax.random.normal(jax.random.PRNGKey(8), (bsz, sq, hq, d))
+    start = jnp.asarray([7, 30], jnp.int32)
+    kv_len = start + sq
+    kw = dict(scale=d ** -0.5, window=window)
+    got = kernel_ops.paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, start,
+        kv_len, backend="pallas", interpret=True, **kw)
+    want = kernel_ops.paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, start,
+        kv_len, backend="ref", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_base_only_variant():
+    """Base-only prefill kernel == disaggregated kernel with zero
+    residuals == ref backend with kr_pool=None == the dense oracle with a
+    zero residual stream (unified caches / base-only prefill)."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.paged_residual_attention import (
+        paged_attention_prefill_base, paged_residual_attention_prefill)
+    bsz, sq, hq, hkv, d, r, page, npages, pool = 2, 18, 8, 2, 64, 16, 16, \
+        6, 48
+    inp = make_paged_inputs(jax.random.PRNGKey(9), bsz=bsz, hq=hq, hkv=hkv,
+                            d=d, r=r, page=page, npages=npages, pool=pool)
+    _, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, _ = inp
+    q = jax.random.normal(jax.random.PRNGKey(10), (bsz, sq, hq, d))
+    start = jnp.asarray([0, 41], jnp.int32)
+    kv_len = start + sq
+    got = paged_attention_prefill_base(q, kb_pool, vb_pool, bt, start,
+                                       kv_len, scale=d ** -0.5,
+                                       interpret=True)
+    want_ref = kernel_ops.paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, None, None, None, None, bt, None, start,
+        kv_len, backend="ref", scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
+                               rtol=2e-5, atol=2e-5)
+    z = jnp.zeros_like(kr_pool)
+    want_zero = paged_residual_attention_prefill(
+        q, kb_pool, vb_pool, z, z, jnp.zeros_like(b_k),
+        jnp.zeros_like(b_v), bt, bt, start, kv_len, scale=d ** -0.5,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_zero),
+                               rtol=2e-5, atol=2e-5)
+    want_oracle = paged_prefill_dense_oracle(
+        q, kb_pool, vb_pool, z, z, jnp.zeros_like(b_k),
+        jnp.zeros_like(b_v), bt, start, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [5, 32])
+def test_paged_decode_sliding_window_matches_ref(window):
+    """SWA decode through the paged kernels (window-clamped page walk +
+    in-page masking) vs the gather mirror, across ragged kv_len including
+    windows smaller than one page and kv_len < window."""
+    from repro.kernels import ops as kernel_ops
+    bsz, hq, hkv, d, r, page, npages, pool = 4, 8, 2, 64, 16, 16, 8, 64
+    s = npages * page
+    inp = make_paged_inputs(jax.random.PRNGKey(11), bsz=bsz, hq=hq,
+                            hkv=hkv, d=d, r=r, page=page, npages=npages,
+                            pool=pool, kv_len=[3, page, 77, s])
+    q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, kv_len = inp
+    kw = dict(scale=d ** -0.5, window=window)
+    got = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        backend="pallas", interpret=True, **kw)
+    want = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt, bt, kv_len,
+        backend="ref", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # base-only variant under the same window
+    got_b = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, None, None, None, None, bt, None, kv_len,
+        backend="pallas", interpret=True, **kw)
+    want_b = kernel_ops.paged_residual_attention(
+        q, kb_pool, vb_pool, None, None, None, None, bt, None, kv_len,
+        backend="ref", **kw)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(want_b),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,229 @@
+"""Property-based fuzz of the radix/CoW/tier lifecycle (hypothesis).
+
+Random interleavings of fork / append(commit) / evict / demote / promote
+against a dict-of-tokens oracle: every KV page carries its own tokens as
+content (via fake export/import callbacks), so any refcount, CoW, or
+tier-transition bug surfaces as a content mismatch on a later match — the
+fuzz analogue of "the cache returned bytes that belong to someone else".
+
+Checked after every operation:
+  * no leaked transient locks (every ``lock_ref`` returns to 0);
+  * device nodes own live pages (refcount >= 1) and no page is owned by
+    two nodes of the same pool; host nodes hold live host-tier handles;
+  * pool accounting (free + used == total) never drifts;
+  * session-pinned prefixes survive arbitrary eviction/demotion pressure
+    and keep matching in full;
+  * matched pages always hold exactly the tokens they claim to cache
+    (bit-identical through demote -> host-LRU -> promote round trips).
+
+Optional-dep-guarded: skipped when ``hypothesis`` is unavailable
+(requirements-dev.txt installs it in CI).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # minimal env: skip the fuzz suite
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.pool import PagePool
+from repro.serving.radix import DualRadixTree
+from repro.serving.tiers import HostTier, TieredPagePool
+
+PAGE = 4
+N_PAGES = 24
+ADAPTERS = (0, 1)
+
+
+class FuzzHarness:
+    """DualRadixTree over two tiered pools + a dict-of-tokens oracle."""
+
+    def __init__(self, host_budget_bytes: int, promote_limit: int):
+        self.host = HostTier(host_budget_bytes)
+        self.mem = {"base": {}, "res": {}}      # page id -> token ndarray
+        self.base_pool = TieredPagePool(
+            PagePool(N_PAGES, PAGE, "base"), self.host,
+            promote_limit=promote_limit)
+        self.res_pool = TieredPagePool(
+            PagePool(N_PAGES, PAGE, "residual"), self.host,
+            promote_limit=promote_limit)
+        self.dual = DualRadixTree(self.base_pool, self.res_pool)
+        self.base_pool.bind(
+            export_fn=lambda p: self._export("base", p),
+            import_fn=lambda p, b: self._import("base", p, b),
+            pressure_fn=lambda n: self.dual.base.evict(n))
+        self.res_pool.bind(
+            export_fn=lambda p: self._export("res", p),
+            import_fn=lambda p, b: self._import("res", p, b),
+            pressure_fn=lambda n: self.dual.residual.evict(n))
+        self.committed = []                     # (tokens tuple, adapter_id)
+        self.pinned = []                        # (tokens, aid, handle, len)
+
+    # fake device<->host byte movement: one page blob = its tokens
+    def _export(self, kind, pages):
+        return [{"d": self.mem[kind][p].copy()} for p in pages]
+
+    def _import(self, kind, pages, blobs):
+        for p, b in zip(pages, blobs):
+            self.mem[kind][p] = b["d"].copy()
+
+    def _alloc(self, pool, evict, n):
+        if n == 0:
+            return []
+        pages = pool.alloc(n)
+        if pages is None:
+            evict(n - pool.free_pages)
+            pages = pool.alloc(n)
+        return pages
+
+    # --------------------------------------------------------------- ops
+    def commit(self, tokens, aid):
+        """Engine-style publish: alloc pages for the whole sequence, write
+        their contents, insert into both trees, drop the local refs (the
+        trees adopt the new suffix; duplicate prefix pages free)."""
+        n = len(tokens) // PAGE
+        base_pages = self._alloc(self.base_pool, self.dual.base.evict, n)
+        if base_pages is None:
+            return
+        res_pages = self._alloc(self.res_pool, self.dual.residual.evict, n)
+        if res_pages is None:
+            self.base_pool.decref(base_pages)
+            return
+        for i in range(n):
+            chunk = np.asarray(tokens[i * PAGE:(i + 1) * PAGE], np.int64)
+            self.mem["base"][base_pages[i]] = chunk.copy()
+            self.mem["res"][res_pages[i]] = chunk.copy()
+        self.dual.commit(tokens, aid, base_pages, res_pages)
+        self.base_pool.decref(base_pages)
+        self.res_pool.decref(res_pages)
+        if (tuple(tokens), aid) not in self.committed:
+            self.committed.append((tuple(tokens), aid))
+
+    def fork(self, tokens, aid):
+        """fork + oracle check + release: whatever prefix the trees claim
+        to have cached must hold exactly those tokens."""
+        fr = self.dual.fork(tokens, aid, lock=True)
+        try:
+            for kind, matched, pages in (("base", fr.base_len,
+                                          fr.base_pages),
+                                         ("res", fr.res_len,
+                                          fr.res_pages)):
+                assert matched % PAGE == 0
+                assert len(pages) == matched // PAGE, \
+                    (kind, matched, pages)
+                for i, p in enumerate(pages):
+                    want = np.asarray(tokens[i * PAGE:(i + 1) * PAGE],
+                                      np.int64)
+                    np.testing.assert_array_equal(
+                        self.mem[kind][p], want,
+                        err_msg=f"{kind} page {p} holds foreign tokens")
+            assert fr.reuse_len == min(fr.base_len, fr.res_len)
+        finally:
+            self.dual.release(fr, aid)
+
+    def pin(self, tokens, aid):
+        handle = self.dual.pin(tokens, aid)
+        self.pinned.append((tokens, aid, handle, handle[2]))
+
+    def unpin(self, idx):
+        tokens, aid, handle, _ = self.pinned.pop(idx % len(self.pinned))
+        self.dual.unpin(handle, aid)
+
+    # -------------------------------------------------------- invariants
+    def _iter_nodes(self, root):
+        stack = list(root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def check(self):
+        for pool, trees in ((self.base_pool, [self.dual.base]),
+                            (self.res_pool,
+                             list(self.dual.residual.trees.values()))):
+            seen = set()
+            for tree in trees:
+                for node in self._iter_nodes(tree.root):
+                    assert node.lock_ref == 0, "leaked transient lock"
+                    assert node.pin_ref >= 0
+                    if node.tier == "device":
+                        for p in node.pages:
+                            assert pool.refcount(p) >= 1, \
+                                "tree references a freed page"
+                            assert p not in seen, \
+                                "page owned by two nodes"
+                            seen.add(p)
+                    else:
+                        for h in node.pages:
+                            assert h in self.host, \
+                                "host node references a dropped handle"
+            inner = pool.pool
+            assert inner.free_pages + inner.used_pages == inner.num_pages
+        assert self.host.used_bytes >= 0
+        # pinned prefixes are immune to eviction AND demotion: they must
+        # still match in full, without any tier promotion
+        for tokens, aid, _, mlen in self.pinned:
+            fr = self.dual.fork(tokens, aid, lock=False)
+            assert fr.reuse_len >= mlen, "pinned prefix lost cache"
+
+    def teardown(self):
+        while self.pinned:
+            self.unpin(0)
+        self.dual.base.evict(N_PAGES)
+        self.dual.residual.evict(N_PAGES)
+        self.check()
+        # with no pins and full eviction pressure, every device page must
+        # be reclaimable — anything less is a refcount leak
+        assert self.base_pool.pool.free_pages == N_PAGES
+        assert self.res_pool.pool.free_pages == N_PAGES
+
+
+if HAVE_HYPOTHESIS:
+    def seqs(draw):
+        """A page-aligned token sequence (1–4 pages, tiny alphabet so
+        radix paths branch and share)."""
+        return draw(st.lists(st.integers(0, 4), min_size=PAGE,
+                             max_size=4 * PAGE).map(
+            lambda t: t[:len(t) // PAGE * PAGE]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_radix_cow_tier_fuzz(data):
+        host_budget = data.draw(st.sampled_from(
+            [0, 2 * PAGE * 8, 10 ** 6]), label="host_budget")
+        promote_limit = data.draw(st.sampled_from([0, 1]),
+                                  label="promote_limit")
+        h = FuzzHarness(host_budget, promote_limit)
+        n_ops = data.draw(st.integers(5, 30), label="n_ops")
+        for _ in range(n_ops):
+            op = data.draw(st.sampled_from(
+                ["commit", "append", "fork", "evict_base", "evict_res",
+                 "pin", "unpin"]), label="op")
+            aid = data.draw(st.sampled_from(ADAPTERS), label="aid")
+            if op == "commit":
+                h.commit(seqs(data.draw), aid)
+            elif op == "append" and h.committed:
+                base, base_aid = h.committed[
+                    data.draw(st.integers(0, len(h.committed) - 1))]
+                h.commit(list(base) + seqs(data.draw), base_aid)
+            elif op == "fork":
+                if h.committed and data.draw(st.booleans()):
+                    toks, aid = h.committed[
+                        data.draw(st.integers(0, len(h.committed) - 1))]
+                    cut = data.draw(st.integers(1, len(toks)))
+                    h.fork(list(toks[:cut]), aid)
+                else:
+                    h.fork(seqs(data.draw) or [0] * PAGE, aid)
+            elif op == "evict_base":
+                h.dual.base.evict(data.draw(st.integers(1, N_PAGES)))
+            elif op == "evict_res":
+                h.dual.residual.evict(data.draw(st.integers(1, N_PAGES)))
+            elif op == "pin" and h.committed and len(h.pinned) < 3:
+                toks, aid = h.committed[
+                    data.draw(st.integers(0, len(h.committed) - 1))]
+                h.pin(list(toks), aid)
+            elif op == "unpin" and h.pinned:
+                h.unpin(data.draw(st.integers(0, 7)))
+            h.check()
+        h.teardown()
