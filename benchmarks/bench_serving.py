@@ -1,0 +1,222 @@
+"""Online serving latency under Poisson arrivals: iteration-level mixed
+batching vs the legacy phase-separated step loop (DESIGN.md §14).
+
+The point of the token-budget scheduler: with phase separation, a long
+prompt's prefill call head-of-line-blocks every in-flight decode row for
+that call's whole wall clock, so tail TPOT (and the TTFT of anything
+queued behind the prompt) degrades as soon as arrivals overlap.  Mixed
+batching caps each iteration at a token budget, packs every decode row
+first and streams prompts in as chunks — same total work, bounded
+per-iteration latency.
+
+Method: one seeded Poisson open-loop workload (exponential inter-arrival
+gaps, multi-LoRA round-robin adapters, mixed prompt lengths) is replayed
+against two otherwise-identical ForkServers — ``mixed_batching=True`` and
+``False`` — submitting each request via ``server.generate()`` when its
+arrival time comes up while continuously draining ``server.poll()``.
+Per-request TTFT/TPOT aggregates come from ``Engine.metrics()`` (the
+satellite of the same PR); throughput is generated tokens over the
+measured wall clock.
+
+Emits CSV rows (benchmarks.run harness format) AND writes
+``BENCH_serving.json`` with a mixed-vs-phase-separated comparison block.
+
+  python -m benchmarks.bench_serving             # full sweep
+  python -m benchmarks.bench_serving --smoke     # CI-sized, same JSON
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, get_tiny_model
+from repro.core.config import ServeConfig
+from repro.serving.api import ForkServer
+from repro.serving.sampling import SamplingParams
+
+# Queue-saturated regime (arrivals outpace the 4-slot batch, so TTFT is
+# dominated by queue drain): this is where iteration-level batching's
+# FCFS budget allocation beats the legacy loop's processor-sharing
+# split — the legacy prefill call divides ``max_prefill_tokens`` across
+# every running prefill row, so ALL of them finish late, holding their
+# batch slots and starving the queue; mixed gives the head row the whole
+# budget, drains it through decode and admits the next request sooner.
+# Under light load (no queue) the two are within noise of each other and
+# the unified call's padding overhead can put mixed slightly behind on
+# this CPU testbed — the kernels skip dead rows, but the XLA layers
+# around them still compute the padded (batch, chunk) tile.
+FULL = dict(n_requests=24, rate_rps=7.0, prompt_lo=64, prompt_hi=128,
+            max_new=8, max_pages=512, max_batch=4, max_prefill_tokens=16,
+            n_adapters=4, seed=0)
+SMOKE = dict(n_requests=10, rate_rps=7.0, prompt_lo=64, prompt_hi=128,
+             max_new=6, max_pages=320, max_batch=4, max_prefill_tokens=16,
+             n_adapters=2, seed=0)
+
+
+def _workload(knobs: Dict, vocab: int, salt: int = 0):
+    """Seeded open-loop trace: (arrival_s, adapter_id, prompt) per
+    request.  The arrival/length schedule depends only on ``seed`` —
+    identical for both batching modes AND for warmup-vs-measured — while
+    ``salt`` varies the token content, so a warmup replay compiles every
+    bucket the measured replay will hit without seeding the radix cache
+    with the measured prompts."""
+    rng = np.random.default_rng(knobs["seed"])
+    rng_tok = np.random.default_rng(knobs["seed"] + 7919 * (salt + 1))
+    gaps = rng.exponential(1.0 / knobs["rate_rps"], knobs["n_requests"])
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(knobs["n_requests"]):
+        plen = int(rng.integers(knobs["prompt_lo"], knobs["prompt_hi"] + 1))
+        prompt = list(rng_tok.integers(0, vocab, plen))
+        reqs.append((float(arrivals[i]), i % knobs["n_adapters"], prompt))
+    return reqs
+
+
+def _run_side(mixed: bool, knobs: Dict) -> Dict:
+    cfg, params, lora = get_tiny_model(rank=8,
+                                       n_adapters=knobs["n_adapters"])
+    sc = ServeConfig(page_size=16, max_pages=knobs["max_pages"],
+                     max_batch=knobs["max_batch"],
+                     max_prefill_tokens=knobs["max_prefill_tokens"],
+                     mode="forkkv", max_pages_per_req=16,
+                     mixed_batching=mixed)
+    server = ForkServer(cfg, params, lora, sc)
+    sp = SamplingParams(max_new_tokens=knobs["max_new"])
+
+    def _replay(trace):
+        t0 = time.perf_counter()
+        handles: List = []
+        i = 0
+        while i < len(trace):
+            now = time.perf_counter() - t0
+            while i < len(trace) and trace[i][0] <= now:
+                _, aid, prompt = trace[i]
+                handles.append(server.generate(aid, list(prompt), sp))
+                i += 1
+            if i < len(trace) and not server.engine.running \
+                    and not server.engine.waiting:
+                # idle gap before the next arrival: don't spin the engine
+                time.sleep(min(0.002, max(0.0, trace[i][0] - now)))
+            else:
+                server.poll()
+        outs = server.wait(handles)
+        return outs, time.perf_counter() - t0
+
+    # warmup outside the clock: timed replays of the SAME arrival/length
+    # schedule with different token content, repeated until the jit
+    # cache stops growing — the measured run must not bill multi-second
+    # compile walls (the schedule is timing-sensitive, so one cold
+    # replay alone can miss buckets the steady-state schedule hits),
+    # and fresh token content keeps the radix cache from handing the
+    # measured replay prefix hits the other side didn't get
+    prev = -1
+    for salt in (1, 2, 3):
+        _replay(_workload(knobs, cfg.vocab_size, salt=salt))
+        size = (server.engine.executor._prefill._cache_size() +
+                server.engine.executor._decode._cache_size())
+        if size == prev:
+            break
+        prev = size
+    m0 = server.metrics()
+
+    outs, wall_s = _replay(_workload(knobs, cfg.vocab_size, salt=0))
+
+    assert all(o.finish_reason == "length" for o in outs), \
+        [o.finish_reason for o in outs]
+    gen_tokens = sum(len(o.tokens) for o in outs)
+    # aggregate over the MEASURED requests only (o.metrics carries the
+    # per-request TTFT/TPOT) — the engine-level aggregates would fold the
+    # compile-heavy warmup requests into the tail
+    ttfts = sorted(o.metrics["ttft_ms"] for o in outs)
+    tpots = sorted(o.metrics["tpot_ms"] for o in outs)
+
+    def _pct(vals: List[float], q: float) -> float:
+        return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+
+    m = server.metrics()
+    return {
+        "batching": "mixed" if mixed else "phase_separated",
+        "requests": len(outs),
+        "wall_s": round(wall_s, 3),
+        "gen_tokens": gen_tokens,
+        "throughput_tok_s": round(gen_tokens / max(wall_s, 1e-9), 2),
+        "ttft_mean_ms": round(sum(ttfts) / len(ttfts), 3),
+        "ttft_p50_ms": round(_pct(ttfts, 0.50), 3),
+        "ttft_p99_ms": round(_pct(ttfts, 0.99), 3),
+        "tpot_mean_ms": round(sum(tpots) / len(tpots), 3),
+        "tpot_p50_ms": round(_pct(tpots, 0.50), 3),
+        "tpot_p99_ms": round(_pct(tpots, 0.99), 3),
+        "mixed_steps": m["mixed_steps"],
+        "iteration_token_budget": m["iteration_token_budget"],
+        "decode_jit_variants": m["decode_jit_variants"],
+        "fallback_gather_calls": m["fallback_gather_calls"] -
+        m0["fallback_gather_calls"],
+    }
+
+
+def run(smoke: bool) -> Dict:
+    knobs = SMOKE if smoke else FULL
+    sides = {}
+    for mixed in (True, False):
+        side = _run_side(mixed, knobs)
+        sides[side["batching"]] = side
+        # each side owns its pools + jit cache; start the other clean
+        gc.collect()
+        jax.clear_caches()
+        for metric in ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms",
+                       "tpot_p99_ms"):
+            emit(f"serving.{side['batching']}.{metric}",
+                 side[metric] * 1e3,
+                 f"reqs={side['requests']};tok_s="
+                 f"{side['throughput_tok_s']}")
+    mx, ps = sides["mixed"], sides["phase_separated"]
+
+    def _impr(key: str) -> float:
+        """% improvement of mixed over phase-separated (positive = mixed
+        better)."""
+        return round(100.0 * (ps[key] - mx[key]) / max(ps[key], 1e-9), 2)
+
+    comparison = {
+        "ttft_p99_improvement_pct": _impr("ttft_p99_ms"),
+        "tpot_p99_improvement_pct": _impr("tpot_p99_ms"),
+        "ttft_p50_improvement_pct": _impr("ttft_p50_ms"),
+        "tpot_p50_improvement_pct": _impr("tpot_p50_ms"),
+        "throughput_ratio": round(mx["throughput_tok_s"] /
+                                  max(ps["throughput_tok_s"], 1e-9), 4),
+    }
+    p99_better = (comparison["ttft_p99_improvement_pct"] > 0 or
+                  comparison["tpot_p99_improvement_pct"] > 0)
+    verdict = ("mixed_improves_p99" if p99_better and
+               comparison["throughput_ratio"] >= 0.95
+               else "no_p99_improvement" if comparison["throughput_ratio"]
+               >= 0.95 else "throughput_regression")
+    emit("serving.comparison.throughput_ratio", 0,
+         f"{comparison['throughput_ratio']:.3f};verdict={verdict}")
+    return {"smoke": smoke, "knobs": dict(knobs), "mixed": mx,
+            "phase_separated": ps, "comparison": comparison,
+            "verdict": verdict}
+
+
+def main(argv=None) -> None:
+    # benchmarks.run calls main() with no args while holding its own CLI
+    # flags in sys.argv — parse only what we are explicitly handed
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (same JSON output)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args([] if argv is None else argv)
+    report = run(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

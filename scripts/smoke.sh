@@ -68,4 +68,22 @@ assert all(r["fallback_gather_calls"] == 0 for r in rep["rows"]
            if r["path"] == "paged"), "paged prefill fell back to gather"
 print("prefill bench smoke OK:", rep["summary"])
 PY
+
+echo "== serving benchmark smoke (mixed vs phase-separated, DESIGN.md §14) =="
+python -m benchmarks.bench_serving --smoke --out BENCH_serving.smoke.json
+test -s BENCH_serving.smoke.json
+python - <<'PY'
+import json
+rep = json.load(open("BENCH_serving.smoke.json"))
+for side in ("mixed", "phase_separated"):
+    s = rep[side]
+    assert s["requests"] > 0 and s["gen_tokens"] > 0, s
+    assert s["ttft_p99_ms"] > 0 and s["tpot_p99_ms"] > 0, s
+    assert s["fallback_gather_calls"] == 0, s
+assert rep["mixed"]["mixed_steps"] > 0, "no mixed iterations exercised"
+assert rep["phase_separated"]["mixed_steps"] == 0
+assert rep["comparison"]["throughput_ratio"] > 0
+print("serving bench smoke OK:", rep["comparison"],
+      "verdict:", rep["verdict"])
+PY
 echo "smoke OK"

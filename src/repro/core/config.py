@@ -238,6 +238,21 @@ class ServeConfig:
     # prefill): keeps the compiled-variant count small for short contexts
     # without giving up the kv_len-proportional HBM scaling.
     min_table_pages: int = 4
+    # iteration-level continuous batching (DESIGN.md §14): each engine step
+    # runs ONE token-budget batch plan — all runnable decode rows first
+    # (q=1 each), then chunked-prefill rows filling the remaining budget —
+    # executed as a single mixed executor call through the unified kernel
+    # grid, so a long prompt can never head-of-line-block in-flight token
+    # streams.  False keeps the legacy phase-separated step loop (one
+    # batched prefill call + one decode call per step) for parity testing,
+    # mirroring how ``use_paged_kernel`` gates the paged kernels.
+    mixed_batching: bool = True
+    # total tokens one iteration may compute (decode rows cost 1 each,
+    # prefill rows their chunk length).  0 derives
+    # ``max_prefill_tokens + max_batch`` — a full decode batch ON TOP of
+    # the full legacy prefill budget, so flipping ``mixed_batching`` on
+    # never shrinks per-step throughput relative to the old phase loop.
+    iteration_token_budget: int = 0
     mode: str = "forkkv"             # forkkv | prefix | full_reuse
     # beyond-paper features (DESIGN.md §9); defaults are paper-faithful.
     broadcast_fork: bool = False

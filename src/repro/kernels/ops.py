@@ -168,3 +168,40 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
         q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
         start, kv_len, scale=scale, window=window, rope_theta=rope_theta,
         use_rope=use_rope, interpret=interpret)
+
+
+def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                   b_k, b_v, bt_b, bt_r, start, q_len,
+                                   kv_len, *, scale: Optional[float] = None,
+                                   window: int = 0,
+                                   rope_theta: float = 10_000.0,
+                                   use_rope: bool = True,
+                                   backend: Optional[str] = None,
+                                   interpret: Optional[bool] = None
+                                   ) -> jnp.ndarray:
+    """Unified mixed prefill/decode attention (DESIGN.md §14): one launch
+    over rows of different q-lengths — decode rows (``q_len=1``) and
+    chunked-prefill rows (``q_len=chunk``) in the same batch, each row's
+    q-length a scalar-prefetch operand.  Rows past ``q_len`` come back as
+    exact zeros on EVERY backend.  ``kv_len`` must equal
+    ``start + q_len`` per row.  Backends exactly as
+    :func:`paged_residual_attention`; pass ``kr_pool=None`` for the
+    base-only variant.  Returns (B, chunk, Hq, D).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    be = backend or get_backend()
+    if be == "ref":
+        return ref_mod.paged_residual_attention_mixed_ref(
+            q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+            start, q_len, kv_len, scale=scale, window=window,
+            rope_theta=rope_theta, use_rope=use_rope)
+    interpret = _resolve_interpret(interpret)
+    if kr_pool is None:
+        return pra.paged_attention_mixed_base(
+            q, kb_pool, vb_pool, bt_b, start, q_len, kv_len, scale=scale,
+            window=window, interpret=interpret)
+    return pra.paged_residual_attention_mixed(
+        q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
+        start, q_len, kv_len, scale=scale, window=window,
+        rope_theta=rope_theta, use_rope=use_rope, interpret=interpret)

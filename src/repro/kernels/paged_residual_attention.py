@@ -25,7 +25,7 @@ and their FLOPs are skipped too, so a long-context SWA request pays for
 ``ceil(window/page) + 1`` trailing pages, not its whole history
 (DESIGN.md §13).
 
-Four variants:
+Six variants:
 
 * :func:`paged_residual_attention_decode` — disaggregated (bCache + rCache
   with per-request B_k/B_v up-projections, ForkKV mode).  RoPE for the
@@ -39,6 +39,17 @@ Four variants:
   causal mask inside the chunk and the running softmax carried across page
   steps in VMEM scratch.
 * :func:`paged_attention_prefill_base` — base-only chunked prefill.
+* :func:`paged_residual_attention_mixed` — the unified grid (DESIGN.md
+  §14): one launch serves rows of DIFFERENT q-lengths — decode rows
+  (q_len=1) and chunked-prefill rows (q_len=chunk) side by side in the
+  same batch.  Each row's q-length rides in as a scalar-prefetch operand;
+  rows are padded to the tile's chunk width and the per-row mask
+  ``rowidx < q_len`` kills padding rows, whose outputs are written as
+  exact zeros (deterministic across backends, unlike prefill's
+  ignored-garbage rows).  This is what lets iteration-level continuous
+  batching attend a mixed plan in ONE kernel launch instead of a prefill
+  launch plus a decode launch.
+* :func:`paged_attention_mixed_base` — base-only unified grid.
 """
 from __future__ import annotations
 
@@ -576,4 +587,238 @@ def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
         interpret=interpret,
     )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32),
       start.astype(jnp.int32), qt, kb_pool, vb_pool)
+    return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
+
+
+# --------------------------------------------------------------------------
+# Unified mixed prefill/decode grid (DESIGN.md §14)
+# --------------------------------------------------------------------------
+def _kernel_mixed(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
+                  kb_ref, vb_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+                  m_scr, l_scr, acc_scr, accr_scr, *, scale: float,
+                  page: int, window: int, rope_theta: float,
+                  use_rope: bool):
+    """Prefill kernel body generalized with a per-row q-length: rows past
+    ``q_len`` are masked everywhere and written out as zeros, and rows
+    with ``q_len == 0`` (batch padding) skip every page's FLOPs."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g, chunk, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = g * chunk
+    kvlen = kvlen_ref[b]        # valid tokens INCLUDING this row's writes
+    start = start_ref[b]        # absolute position of the row's first query
+    qlen = qlen_ref[b]          # valid query rows (1 = decode, chunk = full)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accr_scr[...] = jnp.zeros_like(accr_scr)
+
+    live = (qlen > 0) & (j * page < kvlen)
+    if window > 0:
+        live = live & ((j + 1) * page > start - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
+                           rope_theta=rope_theta, use_rope=use_rope)
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rowidx = jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        rowpos = start + rowidx
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = (kpos < kvlen) & (kpos <= rowpos) & (rowidx < qlen)
+        if window > 0:
+            mask = mask & (kpos > rowpos - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32),
+                        accr_scr, vr_ref[0].astype(jnp.float32))
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        b_v = bv_ref[0, 0].astype(jnp.float32)
+        acc = acc_scr[...] + jnp.dot(accr_scr[...], b_v,
+                                     preferred_element_type=jnp.float32)
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        rowidx = jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        out = jnp.where(rowidx < qlen, acc / l, 0.0)
+        out_ref[0, 0] = out.reshape(g, chunk, d).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "rope_theta",
+                                             "use_rope", "interpret"))
+def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
+                                   b_k, b_v, bt_b, bt_r, start, q_len,
+                                   kv_len, *, scale: float, window: int = 0,
+                                   rope_theta: float = 10_000.0,
+                                   use_rope: bool = True,
+                                   interpret: bool = True):
+    """Unified mixed prefill/decode grid over paged disaggregated caches.
+
+    Identical to :func:`paged_residual_attention_prefill` except each row
+    additionally carries ``q_len`` (B,) — its count of VALID query rows —
+    as a scalar-prefetch operand: a decode row is ``q_len=1`` (its single
+    query padded up to the tile's chunk width), a prefill row uses its
+    whole chunk.  Rows past ``q_len`` produce exact zeros; ``q_len=0``
+    rows (batch padding) skip all FLOPs.  ``kv_len`` must equal
+    ``start + q_len`` per row.  Returns (B, chunk, Hq, D).
+    """
+    bsz, sq, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    g = hq // hkv
+    r = kr_pool.shape[-1]
+    n_pages = bt_b.shape[1]
+    rows = g * sq
+
+    qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+    bvt = b_v.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel_mixed, scale=scale, page=page,
+                               window=window, rope_theta=rope_theta,
+                               use_rope=use_rope)
+    clamp = _prefill_page_clamp(page, window)
+
+    def _b_map(b, h, j, btb, btr, kvl, st, ql):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
+
+    def _r_map(b, h, j, btb, btr, kvl, st, ql):
+        return (btr[b, clamp(j, kvl[b], st[b])], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(bsz, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, sq, d),
+                         lambda b, h, j, btb, btr, kvl, st, ql:
+                         (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, r), _r_map),
+            pl.BlockSpec((1, page, r), _r_map),
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, sq, d),
+            lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, r), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
+        interpret=interpret,
+    )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
+      kv_len.astype(jnp.int32), start.astype(jnp.int32),
+      q_len.astype(jnp.int32), qt, kb_pool, vb_pool, kr_pool, vr_pool,
+      bkt, bvt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
+
+
+def _kernel_mixed_base(bt_b_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
+                       kb_ref, vb_ref, out_ref, m_scr, l_scr, acc_scr, *,
+                       scale: float, page: int, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g, chunk, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = g * chunk
+    kvlen = kvlen_ref[b]
+    start = start_ref[b]
+    qlen = qlen_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INIT)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    live = (qlen > 0) & (j * page < kvlen)
+    if window > 0:
+        live = live & ((j + 1) * page > start - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        k = kb_ref[0, :, 0, :].astype(jnp.float32)
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rowidx = jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        rowpos = start + rowidx
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = (kpos < kvlen) & (kpos <= rowpos) & (rowidx < qlen)
+        if window > 0:
+            mask = mask & (kpos > rowpos - window)
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
+                        vb_ref[0, :, 0, :].astype(jnp.float32))
+
+    @pl.when(j == nj - 1)
+    def _fini():
+        l = jnp.maximum(l_scr[:, :1], 1e-20)
+        rowidx = jax.lax.broadcasted_iota(
+            jnp.int32, (g, chunk), 1).reshape(rows, 1)
+        out = jnp.where(rowidx < qlen, acc_scr[...] / l, 0.0)
+        out_ref[0, 0] = out.reshape(g, chunk, d).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_attention_mixed_base(q, kb_pool, vb_pool, bt_b, start, q_len,
+                               kv_len, *, scale: float, window: int = 0,
+                               interpret: bool = True):
+    """Base-only unified mixed grid: unified caches / no-LoRA requests.
+    Shapes as :func:`paged_residual_attention_mixed` minus the residual
+    stream.  Returns (B, chunk, Hq, D)."""
+    bsz, sq, hq, d = q.shape
+    page, hkv = kb_pool.shape[1], kb_pool.shape[2]
+    g = hq // hkv
+    n_pages = bt_b.shape[1]
+    rows = g * sq
+    qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+
+    kernel = functools.partial(_kernel_mixed_base, scale=scale, page=page,
+                               window=window)
+    clamp = _prefill_page_clamp(page, window)
+
+    def _b_map(b, h, j, btb, kvl, st, ql):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bsz, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, sq, d),
+                         lambda b, h, j, btb, kvl, st, ql: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+            pl.BlockSpec((1, page, 1, d), _b_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, sq, d),
+            lambda b, h, j, btb, kvl, st, ql: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
+        interpret=interpret,
+    )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32),
+      start.astype(jnp.int32), q_len.astype(jnp.int32), qt, kb_pool,
+      vb_pool)
     return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)

@@ -145,6 +145,46 @@ def paged_residual_attention_prefill_ref(q, kb_pool, vb_pool, kr_pool,
     return _masked_softmax_attention(q, k, v, mask, scale)
 
 
+def paged_residual_attention_mixed_ref(q, kb_pool, vb_pool, kr_pool,
+                                       vr_pool, b_k, b_v, bt_b, bt_r,
+                                       start, q_len, kv_len, *,
+                                       scale: Optional[float] = None,
+                                       window: int = 0,
+                                       rope_theta: float = 10_000.0,
+                                       use_rope: bool = True
+                                       ) -> jnp.ndarray:
+    """XLA mirror of the unified mixed prefill/decode kernels
+    (DESIGN.md §14): the prefill oracle generalized with a per-row
+    ``q_len`` — rows past it are masked out AND explicitly zeroed in the
+    output, matching the Pallas kernels' deterministic zero padding (a
+    fully-masked softmax row would otherwise average V instead of
+    vanishing).
+
+    q: (B, chunk, Hq, D); start/q_len/kv_len: (B,) with
+    ``kv_len = start + q_len``.  Pass ``kr_pool=None`` for the base-only
+    variant.  Returns (B, chunk, Hq, D).
+    """
+    bsz, sq, hq, d = q.shape
+    sk = bt_b.shape[1] * kb_pool.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
+                            b_v, bt_b, bt_r, rope_theta=rope_theta,
+                            use_rope=use_rope)
+    rowidx = jnp.arange(sq)[None]                       # (1, Sq)
+    rowvalid = rowidx < q_len[:, None]                  # (B, Sq)
+    qpos = start[:, None] + rowidx
+    qp = qpos[:, None, :, None]
+    kp = jnp.arange(sk)[None, None, None, :]
+    mask = (kp <= qp) & (kp < kv_len[:, None, None, None]) & \
+        rowvalid[:, None, :, None]
+    if window > 0:
+        mask = mask & (kp > qp - window)
+    out = _masked_softmax_attention(q, k, v, mask, scale)
+    return jnp.where(rowvalid[:, :, None, None], out,
+                     jnp.zeros_like(out))
+
+
 def residual_attention_ref(q, k_base, v_base, k_res, v_res, b_k, b_v,
                            sin, cos, *, qpos: jnp.ndarray,
                            kv_len: Optional[jnp.ndarray] = None,

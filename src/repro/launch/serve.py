@@ -28,7 +28,9 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  host_tier_bytes: int = 0, tier_promote_limit: int = 0,
                  broadcast_fork: bool = False,
                  adaptive_fallback: bool = False,
-                 use_paged_kernel: bool = True):
+                 use_paged_kernel: bool = True,
+                 mixed_batching: bool = True,
+                 iteration_token_budget: int = 0):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -40,7 +42,9 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      tier_promote_limit=tier_promote_limit,
                      broadcast_fork=broadcast_fork,
                      adaptive_fallback=adaptive_fallback,
-                     use_paged_kernel=use_paged_kernel)
+                     use_paged_kernel=use_paged_kernel,
+                     mixed_batching=mixed_batching,
+                     iteration_token_budget=iteration_token_budget)
     return ForkServer(cfg, params, lora, sc), cfg
 
 
@@ -81,14 +85,22 @@ def main() -> None:
     ap.add_argument("--tier-promote-limit", type=int, default=0,
                     help="max pages promoted host→device per match "
                          "(0 = unlimited)")
+    ap.add_argument("--phase-separated", action="store_true",
+                    help="disable iteration-level continuous batching and "
+                         "run the legacy phase-separated step loop "
+                         "(ServeConfig.mixed_batching=False, DESIGN.md §14)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="iteration token budget for mixed batching "
+                         "(0 = derive max_prefill_tokens + max_batch)")
     ap.add_argument("--gather-decode", action="store_true",
                     help="disable the page-native decode kernel and use "
                          "the legacy gather-to-contiguous path "
                          "(bit-parity testing, DESIGN.md §12)")
     ap.add_argument("--stats", action="store_true",
                     help="print step-phase wall-clock totals "
-                         "(prefill/decode/sync ms) and compiled decode "
-                         "variant count")
+                         "(prefill/decode/sync ms), compiled decode "
+                         "variant count and per-request latency "
+                         "aggregates (TTFT/TPOT p50/p99)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -98,7 +110,9 @@ def main() -> None:
         tier_promote_limit=args.tier_promote_limit,
         broadcast_fork=args.broadcast_fork,
         adaptive_fallback=args.adaptive_fallback,
-        use_paged_kernel=not args.gather_decode)
+        use_paged_kernel=not args.gather_decode,
+        mixed_batching=not args.phase_separated,
+        iteration_token_budget=args.token_budget)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed, max_new_tokens=args.max_new)
@@ -137,6 +151,15 @@ def main() -> None:
                   f"decode_ms_per_step={per_step:.2f} "
                   f"decode_jit_variants={rep['decode_jit_variants']} "
                   f"fallback_gather_calls={rep['fallback_gather_calls']}")
+            batching = ("mixed" if rep["mixed_batching"]
+                        else "phase-separated")
+            print(f"batching={batching} "
+                  f"mixed_steps={rep['mixed_steps']} "
+                  f"token_budget={rep['iteration_token_budget']} "
+                  f"ttft_p50_ms={rep['ttft_p50_ms']:.1f} "
+                  f"ttft_p99_ms={rep['ttft_p99_ms']:.1f} "
+                  f"tpot_p50_ms={rep['tpot_p50_ms']:.1f} "
+                  f"tpot_p99_ms={rep['tpot_p99_ms']:.1f}")
 
 
 if __name__ == "__main__":

@@ -144,6 +144,13 @@ class GenerationHandle:
         tokens = list(req.output[:-1]) if req.output else []
         latency = max(0.0, req.finished_at - req.arrival) \
             if req.finished_at else 0.0
+        # per-request latency breakdown (DESIGN.md §14): TTFT from arrival
+        # to the first sampled token, TPOT the per-token mean after it
+        ttft_s = max(0.0, req.first_token_at - req.arrival) \
+            if req.first_token_at else 0.0
+        tpot_s = (max(0.0, req.finished_at - req.first_token_at) /
+                  max(1, len(req.output) - 1)) if req.first_token_at \
+            else 0.0
         return RequestOutput(
             rid=req.rid, adapter_id=req.adapter_id, tokens=tokens,
             finish_reason=req.finish_reason or "length", error=req.error,
@@ -151,7 +158,9 @@ class GenerationHandle:
                      "prefilled_tokens": req.prefilled_tokens,
                      "prefill_share": req.prefill_share,
                      "kv_len": req.kv_len,
-                     "latency_s": latency})
+                     "latency_s": latency,
+                     "ttft_ms": ttft_s * 1e3,
+                     "tpot_ms": tpot_s * 1e3})
 
 
 class AgentSession:

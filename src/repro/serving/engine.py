@@ -8,13 +8,18 @@ Three cache-sharing policies (paper §7.1):
   * ``full_reuse`` — one unified cache shared across adapters (lossy
                      baseline; first computer wins)
 
-Continuous batching: each engine step runs at most one BATCHED prefill
-call — co-resident chunks from every prefill-state request packed into
-one padded (B, chunk) executor call under the ``max_prefill_tokens``
-budget (DESIGN.md §12) — plus one decode step over all running requests.
-Pools are refcounted; under pressure the decoupled LRU eviction frees
-tree leaves; requests that cannot allocate are queued (admission
-control) or preempted.
+Iteration-level continuous batching (DESIGN.md §14, the default): each
+step asks :class:`~repro.serving.scheduler.IterationScheduler` for ONE
+token-budget batch plan — every runnable decode row first (q=1 each),
+then chunked-prefill rows filling the remaining
+``ServeConfig.iteration_token_budget`` — and runs the whole plan as a
+single mixed executor call through the unified kernel grid, so a long
+prompt can never head-of-line-block in-flight token streams.
+``ServeConfig.mixed_batching=False`` keeps the legacy phase-separated
+loop (one batched prefill call + one decode call per step, DESIGN.md
+§12) for parity testing.  Pools are refcounted; under pressure the
+decoupled LRU eviction frees tree leaves; requests that cannot allocate
+are queued (admission control) or preempted.
 
 With ``ServeConfig.host_tier_bytes > 0`` both device pools are wrapped in
 :class:`~repro.serving.tiers.TieredPagePool` (DESIGN.md §10): eviction
@@ -28,6 +33,7 @@ context pinning, streaming ``GenerationHandle`` s and the ``poll()`` pump.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -39,6 +45,7 @@ from repro.serving.executor import PagedExecutor, pool_bytes
 from repro.serving.pool import PagePool
 from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
 from repro.serving.sampling import GREEDY, SamplingParams
+from repro.serving.scheduler import BatchPlan, IterationScheduler
 from repro.serving.tiers import HostTier, TieredPagePool
 
 
@@ -66,6 +73,12 @@ class Request:
     coowned_base: List[int] = dataclasses.field(default_factory=list)
     fork: Optional[Any] = dataclasses.field(default=None)
     finished_at: float = 0.0
+    # latency timestamps (satellite, DESIGN.md §14): the scheduler stamps
+    # first_scheduled_at when a plan first includes the request; the
+    # engine stamps first_token_at when the first output token lands —
+    # TTFT = first_token_at - arrival, TPOT = the per-token mean after it
+    first_scheduled_at: float = 0.0
+    first_token_at: float = 0.0
     prefilled_tokens: int = 0     # tokens this request actually computed
                                   # (exact int; broadcast attributes the
                                   # shared pass to its writer)
@@ -138,8 +151,18 @@ class Engine:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.done: List[Request] = []
+        # iteration-level planner (DESIGN.md §14); unused when
+        # mixed_batching=False but kept constructed so tests can probe it
+        self.scheduler = IterationScheduler(sc)
         self.steps = 0
-        self.decode_batch_hist: List[int] = []
+        self.mixed_steps = 0          # iterations with decode AND prefill
+        # bounded window of recent decode batch sizes (diagnostics only);
+        # the EXACT running aggregates live in _decode_batch_sum/_steps so
+        # avg_decode_batch/decode_steps stay exact while a long-lived
+        # server's memory stays O(1) instead of one int per step
+        self.decode_batch_hist = collections.deque(maxlen=512)
+        self._decode_batch_sum = 0
+        self._decode_steps = 0
         self.preemptions = 0          # demote-under-pressure events
         self.rejected = 0             # requests refused at admission
         self.stalled = 0              # requests failed by stall detection
@@ -367,6 +390,8 @@ class Engine:
                 host_toks = np.asarray(next_toks)
                 self.sync_ms += (time.perf_counter() - t0) * 1e3
             tok = int(host_toks[i])
+            if r.first_token_at == 0.0:
+                r.first_token_at = time.time()
             r.output.append(tok)
             # the sampled token's KV is not cached yet; it will be written
             # when the decode step consumes it
@@ -379,6 +404,13 @@ class Engine:
         dump = self.dump_b
         return bt + [dump] * (self.max_pages_per_req - len(bt))
 
+    def _note_decode_batch(self, n: int) -> None:
+        """Record one decode iteration's batch size: bounded window for
+        diagnostics + exact running aggregates for the metrics."""
+        self.decode_batch_hist.append(n)
+        self._decode_batch_sum += n
+        self._decode_steps += 1
+
     # ------------------------------------------------------------- decode
     def _decode_all(self) -> bool:
         batch = [r for r in self.running if r.state == "decode"
@@ -386,7 +418,7 @@ class Engine:
         batch = batch[:self.sc.max_batch]
         if not batch:
             return False
-        self.decode_batch_hist.append(len(batch))
+        self._note_decode_batch(len(batch))
         page = self.sc.page_size
         toks, kvl, ids, btb, btr, wpb, wpr, woff = [], [], [], [], [], [], \
             [], []
@@ -421,6 +453,8 @@ class Engine:
         for i, r in enumerate(batch):
             r.kv_len += 1
             tok = int(host_toks[i])
+            if r.first_token_at == 0.0:   # fully-cached admission: the
+                r.first_token_at = time.time()  # first token is a decode
             r.output.append(tok)
             if tok in r.params.stop_token_ids:
                 self._finish(r, reason="stop")
@@ -519,6 +553,110 @@ class Engine:
         writer.prefilled_tokens += len(chunk)
         return True
 
+    # -------------------------------------------------- mixed iteration
+    def _run_mixed(self, plan: BatchPlan) -> bool:
+        """Execute one iteration-level batch plan (DESIGN.md §14) as a
+        SINGLE mixed executor call: decode rows carry their last sampled
+        token (q=1), prefill rows their next prompt chunk.  Rows that
+        will not emit a token this iteration (mid-prompt chunks,
+        context-only requests) get neutral sampling params so an
+        all-greedy emitting set still compiles the argmax-only body; the
+        one host sync happens only when some row emits."""
+        rows = plan.rows
+        if not rows:
+            return False
+        page = self.sc.page_size
+        chunks, starts, aids, btb, btr, wbs, wrs = [], [], [], [], [], \
+            [], []
+        temps, tks, tps, seeds, spos = [], [], [], [], []
+        emit = []
+        for rp in rows:
+            r = rp.req
+            if rp.kind == "decode":
+                chunks.append([r.output[-1] if r.output else r.prompt[-1]])
+                emit.append(True)
+            else:
+                chunks.append(r.prompt[rp.start:rp.end])
+                emit.append(rp.end >= len(r.prompt)
+                            and r.max_new_tokens > 0)
+            starts.append(rp.start)
+            aids.append(r.adapter_id)
+            btb.append(list(r.base_pages))
+            btr.append(list(r.res_pages) if self.mode == "forkkv" else [])
+            wbs.append([self._write_page_for(r, p, "base")
+                        for p in range(rp.start, rp.end)])
+            wrs.append([self._write_page_for(r, p, "res")
+                        for p in range(rp.start, rp.end)]
+                       if self.mode == "forkkv"
+                       else [self.dump_r] * rp.q_len)
+            sp = r.params
+            if emit[-1]:
+                temps.append(sp.temperature)
+                tks.append(sp.top_k)
+                tps.append(sp.top_p)
+                seeds.append(sp.seed)
+                spos.append(len(r.output))
+            else:                   # non-emitting row: neutral params so
+                temps.append(0.0)   # ``sampled`` tracks EMITTING rows only
+                tks.append(0)
+                tps.append(1.0)
+                seeds.append(0)
+                spos.append(0)
+        n_decode = len(plan.decode_rows)
+        if plan.is_mixed:
+            self.mixed_steps += 1
+        t0 = time.perf_counter()
+        next_toks, _ = self.executor.mixed_step(
+            chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
+            top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
+        elapsed = (time.perf_counter() - t0) * 1e3
+        # attribute wall clock by token share: a decode-only iteration is
+        # pure decode_ms (bench_decode's deltas stay meaningful), a mixed
+        # one splits proportionally
+        dec_frac = n_decode / max(1, plan.total_tokens)
+        self.decode_ms += elapsed * dec_frac
+        self.prefill_ms += elapsed * (1.0 - dec_frac)
+        host_toks = None
+        if any(emit):               # ONE blocking D2H per iteration
+            t0 = time.perf_counter()
+            host_toks = np.asarray(next_toks)
+            self.sync_ms += (time.perf_counter() - t0) * 1e3
+        if n_decode:
+            self._note_decode_batch(n_decode)
+        for i, rp in enumerate(rows):
+            r = rp.req
+            if rp.kind == "decode":
+                r.kv_len += 1
+                tok = int(host_toks[i])
+                if r.first_token_at == 0.0:
+                    r.first_token_at = time.time()
+                r.output.append(tok)
+                if tok in r.params.stop_token_ids:
+                    self._finish(r, reason="stop")
+                elif len(r.output) >= r.max_new_tokens + 1 or \
+                        r.kv_len + 1 >= self.max_pages_per_req * page:
+                    self._finish(r, reason="length")
+                continue
+            # prefill row
+            r.prefill_pos = rp.end
+            r.kv_len = rp.end
+            r.prefilled_tokens += rp.q_len
+            r.prefill_share += rp.q_len
+            if rp.end < len(r.prompt):
+                continue
+            if r.max_new_tokens == 0:
+                # context-only request: the cache is the product
+                self._finish(r, reason="length")
+                continue
+            r.state = "decode"
+            tok = int(host_toks[i])
+            if r.first_token_at == 0.0:
+                r.first_token_at = time.time()
+            r.output.append(tok)
+            if tok in r.params.stop_token_ids:
+                self._finish(r, reason="stop")
+        return True
+
     # --------------------------------------------------------------- step
     def step(self) -> None:
         self.steps += 1
@@ -541,15 +679,25 @@ class Engine:
             if req.state == "decode" and req.max_new_tokens == 0:
                 # fully-cached context-only request: nothing to compute
                 self._finish(req, reason="length")
-        # one batched prefill call per step (broadcast if several agents
-        # share an identical upcoming chunk, else co-resident chunks packed
-        # into one padded (B, chunk) executor call)
-        if self._try_broadcast():
-            progress = True
-        elif self._prefill_batch():
-            progress = True
-        if self._decode_all():
-            progress = True
+        if self.sc.mixed_batching:
+            # iteration-level continuous batching (§14): broadcast-fork
+            # groups still take precedence (ONE shared base-trajectory
+            # pass), then one token-budget plan — all runnable decode
+            # rows + budget-filling prefill chunks — runs as one call
+            if self._try_broadcast():
+                progress = True
+            if self._run_mixed(self.scheduler.plan(self.running)):
+                progress = True
+        else:
+            # legacy phase-separated loop: one batched prefill call
+            # (broadcast if several agents share an identical upcoming
+            # chunk), then one decode call
+            if self._try_broadcast():
+                progress = True
+            elif self._prefill_batch():
+                progress = True
+            if self._decode_all():
+                progress = True
         # stall detection: waiting work + nothing admitted/prefilled/decoded
         # for stall_limit consecutive steps -> fail the head request loudly
         # instead of silently burning the caller's step budget
@@ -626,14 +774,37 @@ class Engine:
         evicted += tier["dropped_device_pages"]
         tier["host_used_bytes"] = (self.host_tier.used_bytes
                                    if self.host_tier else 0)
+        # per-request latency aggregates (satellite, §14): TTFT from
+        # arrival to first output token, TPOT the mean gap after it —
+        # over finished generating requests only
+        lat = [r for r in self.done
+               if not r.is_context and r.first_token_at > 0.0]
+        ttfts = sorted((r.first_token_at - r.arrival) * 1e3 for r in lat)
+        tpots = sorted((r.finished_at - r.first_token_at) * 1e3 /
+                       max(1, len(r.output) - 1) for r in lat)
+
+        def _pct(vals, q):
+            if not vals:
+                return 0.0
+            return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+
         return {
             **tier,
             "mode": self.mode,
             "tasks_done": len([r for r in self.done if not r.is_context]),
             "context_prefills": len([r for r in self.done if r.is_context]),
             "steps": self.steps,
-            "avg_decode_batch": (sum(self.decode_batch_hist) /
-                                 max(1, len(self.decode_batch_hist))),
+            "mixed_batching": self.sc.mixed_batching,
+            "mixed_steps": self.mixed_steps,
+            "iteration_token_budget": self.scheduler.budget,
+            "ttft_mean_ms": sum(ttfts) / max(1, len(ttfts)),
+            "ttft_p50_ms": _pct(ttfts, 0.50),
+            "ttft_p99_ms": _pct(ttfts, 0.99),
+            "tpot_mean_ms": sum(tpots) / max(1, len(tpots)),
+            "tpot_p50_ms": _pct(tpots, 0.50),
+            "tpot_p99_ms": _pct(tpots, 0.99),
+            "avg_decode_batch": (self._decode_batch_sum /
+                                 max(1, self._decode_steps)),
             "peak_base_pages": self.peak_base_pages,
             "peak_res_pages": self.peak_res_pages,
             "peak_cache_bytes": used_bytes,
@@ -653,7 +824,7 @@ class Engine:
             "prefill_ms": self.prefill_ms,
             "decode_ms": self.decode_ms,
             "sync_ms": self.sync_ms,
-            "decode_steps": len(self.decode_batch_hist),
+            "decode_steps": self._decode_steps,
             "decode_jit_variants": self.executor.decode_cache_size(),
             "use_paged_kernel": self.executor.use_paged,
             # executor calls that took a legacy gather-to-contiguous path

@@ -120,7 +120,8 @@ class PagedExecutor:
         self._decode = jax.jit(self._decode_fn, donate_argnums=(0,),
                                static_argnames=("sampled",))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(0,),
-                                static_argnames=("chunk", "sampled"))
+                                static_argnames=("chunk", "sampled",
+                                                 "unified"))
 
     # ------------------------------------------------ tiered KV offload
     def export_pages(self, kind: str,
@@ -382,7 +383,7 @@ class PagedExecutor:
     # ------------------------------------------------------------ prefill
     def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_ids,
                     bt_b, bt_r, wpages_b, wpages_r, temps, top_ks, top_ps,
-                    seeds, spos, *, chunk, sampled):
+                    seeds, spos, *, chunk, sampled, unified=False):
         """Chunked prefill for a PADDED BATCH of requests.
 
         tokens: (B, chunk) padded; start: (B,) absolute position of each
@@ -392,6 +393,15 @@ class PagedExecutor:
         written); temps/top_ks/top_ps/seeds/spos: (B,) sampling params for
         each row's first generated token (sampled: static — False compiles
         the argmax-only body).
+
+        ``unified`` (static) routes the paged attention through the mixed
+        prefill/decode grid (DESIGN.md §14): same math, but each row's
+        ``n_valid`` also rides into the kernel as its q-length so rows of
+        wildly different lengths — decode rows padded to the chunk width
+        next to full prefill chunks — share one launch with their padding
+        rows masked to exact zeros.  The non-unified prefill grid instead
+        leaves rows past ``n_valid`` as ignored garbage; both take their
+        logits at row ``n_valid - 1``, so outputs agree.
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
@@ -418,7 +428,21 @@ class PagedExecutor:
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
             new_pools = Pools(kbp, vbp, krp, vrp)
-            if self.use_paged:
+            if self.use_paged and unified:
+                # unified mixed grid (§14): per-row q-length scalar
+                # prefetch — decode rows (n_valid=1) and prefill chunks
+                # attend in ONE launch, padding rows exact-zeroed
+                attn = kernel_ops.paged_residual_attention_mixed(
+                    q, kbp[li], vbp[li],
+                    krp[li] if self.disagg else None,
+                    vrp[li] if self.disagg else None,
+                    bk if self.disagg else None,
+                    bv if self.disagg else None,
+                    bt_b, bt_r if self.disagg else None, start, n_valid,
+                    start + n_valid, scale=cfg.resolved_head_dim ** -0.5,
+                    window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+                    use_rope=cfg.use_rope)
+            elif self.use_paged:
                 # page-native prefill (§13): the chunk's K/V is already in
                 # the pools — stream KV page by page via the block tables,
                 # causal mask inside the chunk, no gather-to-contiguous
@@ -539,6 +563,98 @@ class PagedExecutor:
             jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
             jnp.asarray(spos, jnp.int32),
             chunk=chunk_size, sampled=any(t > 0 for t in temps))
+        return next_tok, logits
+
+    # ------------------------------------------------------- mixed batch
+    def mixed_step(self, chunks, starts, adapter_ids, base_tables,
+                   res_tables, wpages_b, wpages_r, temps=None, top_ks=None,
+                   top_ps=None, seeds=None, spos=None):
+        """One iteration-level mixed batch (DESIGN.md §14): decode rows
+        (``chunks[i] == [last_token]``, ``starts[i] == kv_len``) and
+        chunked-prefill rows side by side, executed as a SINGLE call.
+
+        Shape policy: a plan whose rows are all single-token and fit the
+        decode batch delegates to :meth:`decode` — steady-state decode
+        keeps its own compiled variants (and the logarithmic
+        variant-count bound probed by ``decode_cache_size``).  Truly
+        mixed plans pad rows to the power-of-two chunk width of the
+        LONGEST row and run the unified kernel grid, each row's real
+        length riding in as its q-length.  Returns DEVICE arrays
+        ``(next_tok, logits)``; rows past ``len(chunks)`` are padding.
+        """
+        bsz = len(chunks)
+        qmax = max(len(c) for c in chunks)
+        if qmax == 1 and bsz <= self.sc.max_batch:
+            # decode-shaped plan: write position == starts, attend over
+            # starts+1 tokens — exactly the decode contract
+            return self.decode(
+                [c[0] for c in chunks], list(starts), adapter_ids,
+                base_tables, res_tables,
+                [w[0] for w in wpages_b], [w[0] for w in wpages_r],
+                [s % self.page for s in starts], temps=temps,
+                top_ks=top_ks, top_ps=top_ps, seeds=seeds, spos=spos)
+        # shape-bucket with FLOORS, not just pow2: which rows (and which
+        # chunk lengths) coincide in a plan is timing-sensitive, so
+        # bucketing purely by pow2(bsz)/pow2(qmax) sprays one compiled
+        # variant per batch/chunk combination the schedule happens to
+        # produce — and each stray compile is a multi-second stall in the
+        # serving loop.  Flooring the batch at the steady-state size and
+        # the q tile at the prefill chunk cap collapses both axes to one
+        # or two stable buckets; pad rows/columns carry q_len 0 (or sit
+        # past a row's q_len) and are skipped by the kernels' live/mask
+        # conditions.
+        qpad = _pow2(max(qmax, min(self.sc.max_prefill_tokens, 32)))
+        bpad = _pow2(max(bsz, min(self.sc.max_batch, 4)))
+        temps = list(temps) if temps is not None else [0.0] * bsz
+        top_ks = list(top_ks) if top_ks is not None else [0] * bsz
+        top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
+        seeds = list(seeds) if seeds is not None else [0] * bsz
+        spos = list(spos) if spos is not None else [0] * bsz
+        if self.use_paged:
+            w = self._bucket_width(max(
+                -(-(starts[i] + len(chunks[i])) // self.page)
+                for i in range(bsz)))
+        else:
+            w = self.max_pages_per_req
+            self.fallback_gather_calls += 1
+        toks, nvalid, wb, wr, btb, btr = [], [], [], [], [], []
+        for i in range(bpad):
+            if i < bsz:
+                row = list(chunks[i])
+                pad = qpad - len(row)
+                toks.append(row + [0] * pad)
+                nvalid.append(len(row))
+                wb.append(list(wpages_b[i]) + [self.dump_page] * pad)
+                wr.append(list(wpages_r[i]) + [self.dump_page_r] * pad)
+                btb.append(self._pad_table(base_tables[i], w,
+                                           self.dump_page))
+                btr.append(self._pad_table(res_tables[i], w,
+                                           self.dump_page_r))
+            else:               # padding row: q_len 0, writes to the dump
+                toks.append([0] * qpad)
+                nvalid.append(0)
+                wb.append([self.dump_page] * qpad)
+                wr.append([self.dump_page_r] * qpad)
+                btb.append([self.dump_page] * w)
+                btr.append([self.dump_page_r] * w)
+        pad = bpad - bsz
+        starts = list(starts) + [0] * pad
+        adapter_ids = list(adapter_ids) + [0] * pad
+        temps += [0.0] * pad
+        top_ks += [0] * pad
+        top_ps += [1.0] * pad
+        seeds += [0] * pad
+        spos += [0] * pad
+        self.pools, next_tok, logits = self._prefill(
+            self.pools, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(starts, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+            jnp.asarray(adapter_ids, jnp.int32),
+            jnp.asarray(btb, jnp.int32), jnp.asarray(btr, jnp.int32),
+            jnp.asarray(wb, jnp.int32), jnp.asarray(wr, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
+            jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(spos, jnp.int32),
+            chunk=qpad, sampled=any(t > 0 for t in temps), unified=True)
         return next_tok, logits
 
     # ------------------------------------------------- broadcast fork

@@ -3,6 +3,7 @@
 One parametrized greedy token-parity suite over
 
     {forkkv, prefix, full_reuse} x {paged, gather} x {dense, GQA, MQA, SWA}
+                                 x {mixed, phase-separated}
 
 through the public ``ForkServer`` API, replacing the ad-hoc per-PR parity
 tests (PR 2's forkkv-vs-prefix check, PR 3's paged-vs-gather check): for
@@ -12,6 +13,14 @@ greedy tokens to the legacy gather-to-contiguous oracle path — and the
 paged path must issue ZERO gather-to-contiguous copies, asserted via the
 ``fallback_gather_calls`` metric (the regression guard that SWA models can
 never silently fall back again).
+
+The ``mixed`` axis (DESIGN.md §14) is this matrix's iteration-level
+continuous-batching gate: ``mixed_batching=True`` (the default — one
+token-budget plan per step, decode + prefill rows through the unified
+kernel grid) must produce the same greedy tokens as the legacy
+phase-separated step loop, and the workload staggers its forks so at
+least one iteration REALLY mixes decode and prefill rows
+(``mixed_steps >= 1`` — without the stagger the parity would be vacuous).
 
 Backends: the suite runs under whichever kernel backend
 ``FORKKV_KERNEL_BACKEND`` / ``REPRO_ATTN_BACKEND`` selects (CI runs it
@@ -61,23 +70,48 @@ def models():
     return get
 
 
-def run_workload(model, mode: str, paged: bool):
+def run_workload(model, mode: str, paged: bool, mixed: bool = True):
     """The shared workload: one pinned session context, two CoW forks
     under different adapters, greedy decode.  Deterministic in everything
-    but the (mode, paged, arch) cell under test."""
+    but the (mode, paged, mixed, arch) cell under test.
+
+    The forks are STAGGERED — the second is submitted only after a few
+    polls, while the first is mid-decode — so the iteration scheduler
+    must overlap one request's decode rows with the other's prefill
+    chunks in the same plan (the mixed-grid case the §14 refactor
+    exists for; legacy phase separation serves the exact same schedule
+    through its two per-step calls)."""
     cfg, params, lora = model
     sc = ServeConfig(page_size=PAGE, max_pages=96, max_batch=4,
                      max_prefill_tokens=48, max_pages_per_req=8,
-                     mode=mode, use_paged_kernel=paged)
+                     mode=mode, use_paged_kernel=paged,
+                     mixed_batching=mixed)
     server = ForkServer(cfg, params, lora, sc)
     rng = np.random.default_rng(7)
     ctx = list(rng.integers(0, cfg.vocab_size, 40))
     with server.session(ctx, adapter_id=0) as sess:
-        handles = [sess.fork(a, list(rng.integers(0, cfg.vocab_size, 4 + a)),
-                             SamplingParams(max_new_tokens=5))
-                   for a in (1, 2)]
+        handles = [sess.fork(1, list(rng.integers(0, cfg.vocab_size, 5)),
+                             SamplingParams(max_new_tokens=5))]
+        for _ in range(3):       # first fork reaches decode...
+            server.poll()
+        handles.append(
+            sess.fork(2, list(rng.integers(0, cfg.vocab_size, 6)),
+                      SamplingParams(max_new_tokens=5)))
         outs = [o.tokens for o in server.wait(handles)]
     return outs, server.metrics()
+
+
+# each (arch, mode, paged, mixed) cell is deterministic, and several test
+# parametrizations share cells — memoize so the matrix costs one run per
+# distinct cell instead of re-serving the workload per assertion
+_CELLS = {}
+
+
+def cell(models, arch: str, mode: str, paged: bool, mixed: bool):
+    key = (arch, mode, paged, mixed)
+    if key not in _CELLS:
+        _CELLS[key] = run_workload(models(arch), mode, paged, mixed)
+    return _CELLS[key]
 
 
 @pytest.mark.parametrize("arch", list(ARCHS))
@@ -86,10 +120,11 @@ def test_paged_vs_gather_token_parity(models, mode, arch):
     """Greedy outputs must be token-identical between the page-native
     kernels and the legacy gather path — same workload, same session/fork
     calls, only ``ServeConfig.use_paged_kernel`` flipped — and the paged
-    run must never gather: ``fallback_gather_calls == 0``."""
-    model = models(arch)
-    paged_out, paged_m = run_workload(model, mode, paged=True)
-    gather_out, gather_m = run_workload(model, mode, paged=False)
+    run must never gather: ``fallback_gather_calls == 0``.  Runs under
+    the mixed-batching default, so the unified grid is what's gated."""
+    paged_out, paged_m = cell(models, arch, mode, paged=True, mixed=True)
+    gather_out, gather_m = cell(models, arch, mode, paged=False,
+                                mixed=True)
     assert all(len(t) == 5 for t in paged_out)
     assert paged_out == gather_out
 
@@ -101,3 +136,28 @@ def test_paged_vs_gather_token_parity(models, mode, arch):
     # executor call shows up in the metric
     assert gather_m["use_paged_kernel"] is False
     assert gather_m["fallback_gather_calls"] > 0
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+@pytest.mark.parametrize("mode", MODES)
+def test_mixed_vs_phase_separated_token_parity(models, mode, arch):
+    """The §14 gate: iteration-level continuous batching (the default)
+    must generate the same greedy tokens as the legacy phase-separated
+    step loop — same staggered workload, only
+    ``ServeConfig.mixed_batching`` flipped — while REALLY mixing decode
+    and prefill rows in at least one iteration, still without a single
+    gather fallback."""
+    mixed_out, mixed_m = cell(models, arch, mode, paged=True, mixed=True)
+    legacy_out, legacy_m = cell(models, arch, mode, paged=True,
+                                mixed=False)
+    assert all(len(t) == 5 for t in mixed_out)
+    assert mixed_out == legacy_out
+
+    assert mixed_m["mixed_batching"] is True
+    # the stagger guarantees overlap: without this the parity above would
+    # only ever exercise pure-prefill / pure-decode plans
+    assert mixed_m["mixed_steps"] >= 1
+    assert mixed_m["fallback_gather_calls"] == 0
+    assert legacy_m["mixed_batching"] is False
+    assert legacy_m["mixed_steps"] == 0
+    assert legacy_m["fallback_gather_calls"] == 0
