@@ -1,0 +1,81 @@
+"""Agent-tree workflow over HTTP (DESIGN.md §15).
+
+Spins up the HTTP frontend in-process (the same thing
+``python -m repro.launch.serve --http`` serves), then drives a ReAct-style
+agent tree through it with the stdlib :class:`ForkClient`:
+
+  1. ``POST /v1/sessions`` prefills + pins a shared task context once;
+  2. ``POST /v1/sessions/{id}/fork`` branches N agents off it — each
+     fork inherits the pinned KV pages copy-on-write, so the shared
+     context is never prefilled again;
+  3. one agent streams its tokens over SSE while the rest run batch;
+  4. ``GET /v1/metrics`` shows the cache hits and tenant accounting.
+
+Run:  PYTHONPATH=src python examples/http_client.py [--port 8080]
+With ``--connect``, skips the in-process server and talks to an
+already-running ``serve.py --http`` instance instead.
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.serving.frontend import ForkClient  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--host", default="127.0.0.1")
+ap.add_argument("--port", type=int, default=0,
+                help="with --connect: port of a running server; "
+                     "otherwise the in-process server's port (0 = any)")
+ap.add_argument("--connect", action="store_true",
+                help="talk to an already-running serve.py --http")
+ap.add_argument("--agents", type=int, default=3)
+args = ap.parse_args()
+
+if args.connect:
+    client = ForkClient(host=args.host, port=args.port)
+    fe = None
+else:
+    from repro.launch.serve import build_server
+    from repro.serving.frontend import HttpFrontend
+    server, _ = build_server("forkkv", max_pages=256,
+                             admission="fairshare")
+    fe = HttpFrontend(server, host=args.host,
+                      port=args.port).start_background()
+    client = ForkClient(host=args.host, port=fe.port)
+    print(f"in-process server on http://{args.host}:{fe.port}")
+
+rng = np.random.default_rng(0)
+context = [int(t) for t in rng.integers(0, 1000, 192)]
+
+sid = client.create_session(context, adapter_id=0, tenant="demo")
+print(f"session {sid}: pinned {len(context)}-token shared context")
+
+# one agent streams over SSE...
+print("agent 0 (streaming): ", end="", flush=True)
+instruction = [int(t) for t in rng.integers(0, 1000, 8)]
+for ev in client.stream_fork(sid, instruction, adapter_id=1,
+                             max_new_tokens=12):
+    if ev.get("finished"):
+        print(f" [{ev['finish_reason']}]")
+    else:
+        print(ev["token"], end=" ", flush=True)
+
+# ...the rest fork in batch, each with its own LoRA adapter
+for i in range(1, args.agents):
+    instruction = [int(t) for t in rng.integers(0, 1000, 8)]
+    doc = client.fork(sid, instruction, adapter_id=1 + i,
+                      max_new_tokens=12)
+    print(f"agent {i} (adapter {1 + i}): {doc['tokens']} "
+          f"[{doc['finish_reason']}]")
+
+m = client.metrics()
+print(f"\nhit_rate={m['hit_rate']:.2f} hit_kinds={m.get('hit_kinds')} "
+      f"fallback_gather_calls={m['fallback_gather_calls']}")
+print(f"tenants={m['tenants']}")
+client.close_session(sid)
+if fe is not None:
+    fe.shutdown()

@@ -86,4 +86,52 @@ assert rep["comparison"]["throughput_ratio"] > 0
 print("serving bench smoke OK:", rep["comparison"],
       "verdict:", rep["verdict"])
 PY
+
+echo "== HTTP frontend smoke (SSE streaming + fork parity, DESIGN.md §15) =="
+python -m repro.launch.serve --http --port 0 --max-pages 256 \
+  --admission fairshare > /tmp/forkkv_http.log 2>&1 &
+HTTP_PID=$!
+trap 'kill $HTTP_PID 2>/dev/null || true' EXIT
+for _ in $(seq 120); do
+  grep -q "on http://" /tmp/forkkv_http.log && break
+  sleep 1
+done
+HTTP_PORT=$(sed -n 's#.*on http://[^:]*:\([0-9]*\).*#\1#p' /tmp/forkkv_http.log)
+test -n "$HTTP_PORT" || { cat /tmp/forkkv_http.log; exit 1; }
+HTTP_PORT="$HTTP_PORT" python - <<'PY'
+import os
+import numpy as np
+from repro.launch.serve import build_server
+from repro.serving.frontend import ForkClient
+from repro.serving.sampling import SamplingParams
+
+client = ForkClient(port=int(os.environ["HTTP_PORT"]))
+assert client.healthz()
+rng = np.random.default_rng(0)
+ctx = [int(t) for t in rng.integers(0, 1000, 96)]
+instr = [int(t) for t in rng.integers(0, 1000, 8)]
+
+# streamed SSE completion through a forked session...
+sid = client.create_session(ctx, adapter_id=0)
+events = list(client.stream_fork(sid, instr, adapter_id=1,
+                                 max_new_tokens=8))
+streamed = [e["token"] for e in events if not e.get("finished")]
+assert events[-1]["finished"] and len(streamed) == 8, events[-1]
+assert streamed == events[-1]["tokens"]
+client.close_session(sid)
+
+# ...must match the in-process API token-for-token (greedy), with the
+# paged path never falling back to gather
+server, _ = build_server("forkkv", max_pages=256, admission="fairshare")
+sess = server.session(ctx, adapter_id=0)
+expected = sess.fork(1, instr,
+                     SamplingParams(max_new_tokens=8)).result().tokens
+assert streamed == expected, (streamed, expected)
+m = client.metrics()
+assert m["fallback_gather_calls"] == 0, m["fallback_gather_calls"]
+assert m["queue_depth"] == 0 and m["admission"] == "fairshare"
+print("http smoke OK: parity", len(streamed), "tokens,",
+      "tenants:", list(m["tenants"]))
+PY
+kill $HTTP_PID
 echo "smoke OK"

@@ -269,3 +269,28 @@ class ServeConfig:
     # request is failed with a ``stalled`` error instead of the engine
     # silently spinning until the caller's step budget runs out.
     stall_limit: int = 64
+    # ---- multi-tenant admission (DESIGN.md §15) ----------------------------
+    # admission-order policy: "fifo" (the seed behaviour — strict arrival
+    # order) or "fairshare" (weighted fair queuing across tenants + SRPT
+    # bias + aging + prefix-hit discount; serving/fairshare.py).
+    admission: str = "fifo"
+    # per-tenant WFQ weights as ((tenant, weight), ...); unnamed tenants
+    # get weight 1.0.  Higher weight = more service before the tenant's
+    # virtual clock catches up.
+    tenant_weights: Tuple[Tuple[str, float], ...] = ()
+    # per-tenant budgets, each 0 = unlimited: admitted-but-unfinished
+    # requests; prompt+max_new tokens of those requests; device pages held
+    # pinned by the tenant's live AgentSessions.
+    tenant_max_concurrent: int = 0
+    tenant_max_tokens_in_flight: int = 0
+    tenant_max_pinned_pages: int = 0
+    # fair-share score terms (see the formula in serving/fairshare.py):
+    # SRPT bias multiplier on the request's expected compute, and the
+    # aging credit in cost-tokens per waiting second (bounds starvation).
+    fair_srpt_weight: float = 1.0
+    fair_aging_tokens_per_s: float = 50.0
+    # overload shedding, each 0 = unbounded: waiting-queue depth and
+    # wait-time bounds past which requests are rejected with
+    # ``finish_reason="rejected"`` + a retry-after hint (HTTP 429).
+    max_queue_depth: int = 0
+    max_queue_wait_s: float = 0.0

@@ -30,7 +30,12 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  adaptive_fallback: bool = False,
                  use_paged_kernel: bool = True,
                  mixed_batching: bool = True,
-                 iteration_token_budget: int = 0):
+                 iteration_token_budget: int = 0,
+                 admission: str = "fifo",
+                 tenant_weights: tuple = (),
+                 tenant_max_concurrent: int = 0,
+                 max_queue_depth: int = 0,
+                 max_queue_wait_s: float = 0.0):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -44,7 +49,12 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      adaptive_fallback=adaptive_fallback,
                      use_paged_kernel=use_paged_kernel,
                      mixed_batching=mixed_batching,
-                     iteration_token_budget=iteration_token_budget)
+                     iteration_token_budget=iteration_token_budget,
+                     admission=admission,
+                     tenant_weights=tuple(tenant_weights),
+                     tenant_max_concurrent=tenant_max_concurrent,
+                     max_queue_depth=max_queue_depth,
+                     max_queue_wait_s=max_queue_wait_s)
     return ForkServer(cfg, params, lora, sc), cfg
 
 
@@ -96,6 +106,31 @@ def main() -> None:
                     help="disable the page-native decode kernel and use "
                          "the legacy gather-to-contiguous path "
                          "(bit-parity testing, DESIGN.md §12)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve HTTP instead of running a canned workflow: "
+                         "SSE streaming completions, session/fork routes "
+                         "and /v1/metrics (DESIGN.md §15)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP bind address (with --http)")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="HTTP port (with --http; 0 = ephemeral)")
+    ap.add_argument("--admission", default="fifo",
+                    choices=["fifo", "fairshare"],
+                    help="admission policy: FIFO or weighted-fair-queue "
+                         "multi-tenant scheduling (DESIGN.md §15)")
+    ap.add_argument("--tenant-weight", action="append", default=[],
+                    metavar="TENANT=W",
+                    help="fair-share weight for a tenant (repeatable), "
+                         "e.g. --tenant-weight interactive=4")
+    ap.add_argument("--tenant-max-concurrent", type=int, default=0,
+                    help="per-tenant cap on concurrently admitted "
+                         "requests (0 = unlimited)")
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="shed waiting requests beyond this queue depth "
+                         "(0 = never shed on depth)")
+    ap.add_argument("--max-queue-wait-s", type=float, default=0.0,
+                    help="shed waiting requests older than this many "
+                         "seconds (0 = never shed on wait)")
     ap.add_argument("--stats", action="store_true",
                     help="print step-phase wall-clock totals "
                          "(prefill/decode/sync ms), compiled decode "
@@ -104,6 +139,10 @@ def main() -> None:
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
+    weights = []
+    for spec in args.tenant_weight:
+        name, _, w = spec.partition("=")
+        weights.append((name, float(w or 1.0)))
     server, cfg = build_server(
         args.mode, max_pages=args.max_pages,
         host_tier_bytes=args.host_tier_mb << 20,
@@ -112,7 +151,24 @@ def main() -> None:
         adaptive_fallback=args.adaptive_fallback,
         use_paged_kernel=not args.gather_decode,
         mixed_batching=not args.phase_separated,
-        iteration_token_budget=args.token_budget)
+        iteration_token_budget=args.token_budget,
+        admission=args.admission, tenant_weights=tuple(weights),
+        tenant_max_concurrent=args.tenant_max_concurrent,
+        max_queue_depth=args.max_queue_depth,
+        max_queue_wait_s=args.max_queue_wait_s)
+    if args.http:
+        from repro.serving.frontend import HttpFrontend
+        # start_background so the bound port (possibly ephemeral) can be
+        # printed for callers that parse it (scripts/smoke.sh)
+        fe = HttpFrontend(server, host=args.host,
+                          port=args.port).start_background()
+        print(f"serving mode={args.mode} admission={args.admission} "
+              f"on http://{args.host}:{fe.port}", flush=True)
+        try:
+            fe._thread.join()
+        except KeyboardInterrupt:
+            fe.shutdown()
+        return
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed, max_new_tokens=args.max_new)
@@ -160,6 +216,13 @@ def main() -> None:
                   f"ttft_p99_ms={rep['ttft_p99_ms']:.1f} "
                   f"tpot_p50_ms={rep['tpot_p50_ms']:.1f} "
                   f"tpot_p99_ms={rep['tpot_p99_ms']:.1f}")
+            em = server.metrics()
+            print(f"admission={em['admission']} "
+                  f"queue_depth={em['queue_depth']} "
+                  f"admission_wait_p50_ms={em['admission_wait_p50_ms']:.2f} "
+                  f"admission_wait_p99_ms={em['admission_wait_p99_ms']:.2f} "
+                  f"timeouts={em['timeouts']} shed={em['shed']} "
+                  f"tenants={em['tenants']}")
 
 
 if __name__ == "__main__":

@@ -52,7 +52,8 @@ class TokenEvent:
     index: int                   # position in the generated sequence
     token: Optional[int]         # None on the terminal event
     finished: bool = False
-    finish_reason: str = ""      # stop | length | rejected | stalled
+    finish_reason: str = ""      # stop | length | rejected | stalled |
+                                 # timeout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,9 +63,12 @@ class RequestOutput:
     rid: int
     adapter_id: int
     tokens: List[int]
-    finish_reason: str           # stop | length | rejected | stalled
-    error: str                   # non-empty for rejected/stalled
+    finish_reason: str           # stop | length | rejected | stalled |
+                                 # timeout
+    error: str                   # non-empty for rejected/stalled/timeout
     metrics: Dict[str, float]    # per-request counters (prefill, latency)
+    tenant: str = "default"      # tenant billed for this request (§15)
+    retry_after_s: float = 0.0   # overload-shed backoff hint (HTTP 429)
 
 
 class GenerationHandle:
@@ -154,6 +158,7 @@ class GenerationHandle:
         return RequestOutput(
             rid=req.rid, adapter_id=req.adapter_id, tokens=tokens,
             finish_reason=req.finish_reason or "length", error=req.error,
+            tenant=req.tenant, retry_after_s=req.retry_after_s,
             metrics={"prompt_tokens": len(req.prompt),
                      "prefilled_tokens": req.prefilled_tokens,
                      "prefill_share": req.prefill_share,
@@ -173,10 +178,11 @@ class AgentSession:
     """
 
     def __init__(self, server: "ForkServer", context: Sequence[int],
-                 adapter_id: int, pin_handle):
+                 adapter_id: int, pin_handle, tenant: str = "default"):
         self._server = server
         self.context = list(context)
         self.adapter_id = adapter_id
+        self.tenant = tenant
         self._pin = pin_handle
         self._closed = False
         self.forks = 0
@@ -186,15 +192,17 @@ class AgentSession:
         return not self._closed
 
     def fork(self, adapter_id: int, instruction_tokens: Sequence[int],
-             sampling: Optional[SamplingParams] = None) -> GenerationHandle:
+             sampling: Optional[SamplingParams] = None,
+             deadline_s: float = 0.0) -> GenerationHandle:
         """Fork the pinned context: new request = context ‖ instruction,
-        served under ``adapter_id`` with CoW cache inheritance."""
+        served under ``adapter_id`` with CoW cache inheritance.  The fork
+        bills against the session's tenant."""
         if self._closed:
             raise RuntimeError("fork() on a closed AgentSession")
         self.forks += 1
         return self._server.generate(
             adapter_id, self.context + list(instruction_tokens),
-            sampling=sampling)
+            sampling=sampling, tenant=self.tenant, deadline_s=deadline_s)
 
     def close(self) -> None:
         """Drop the session pin; the context becomes evictable again."""
@@ -238,38 +246,52 @@ class ForkServer:
 
     # ---------------------------------------------------------- sessions
     def session(self, context_tokens: Sequence[int],
-                adapter_id: int = 0) -> AgentSession:
+                adapter_id: int = 0,
+                tenant: str = "default") -> AgentSession:
         """Prefill ``context_tokens`` once and pin the result for the
         session's lifetime.  Synchronous: pumps the engine until the
-        context cache is built (concurrent handles keep streaming)."""
+        context cache is built (concurrent handles keep streaming).
+        ``tenant`` owns the session: forks bill against it and the pinned
+        pages count toward its ``tenant_max_pinned_pages`` budget."""
         req = Request(rid=next(self._rids), adapter_id=adapter_id,
                       prompt=list(context_tokens), max_new_tokens=0,
-                      is_context=True, arrival=time.time())
+                      is_context=True, arrival=time.time(), tenant=tenant)
         self.engine.submit(req)
         while req.state != "done":
             self.poll()
         if req.error:
             raise RuntimeError(f"session context failed: {req.error}")
-        pin = self.engine.pin_prefix(req.prompt, adapter_id)
-        sess = AgentSession(self, context_tokens, adapter_id, pin)
+        pin = self.engine.pin_prefix(req.prompt, adapter_id, tenant=tenant)
+        sess = AgentSession(self, context_tokens, adapter_id, pin,
+                            tenant=tenant)
         self._sessions.add(id(sess))
         return sess
 
     # --------------------------------------------------------- generation
     def generate(self, adapter_id: int, prompt_tokens: Sequence[int],
-                 sampling: Optional[SamplingParams] = None
+                 sampling: Optional[SamplingParams] = None,
+                 tenant: str = "default", deadline_s: float = 0.0
                  ) -> GenerationHandle:
         """Submit a generation request; returns immediately with a handle.
-        (Session-less entry point — ``session.fork`` builds on it.)"""
+        (Session-less entry point — ``session.fork`` builds on it.)
+        ``deadline_s`` bounds QUEUEING time: a request still waiting that
+        long after arrival finishes with ``finish_reason="timeout"``
+        instead of waiting forever (DESIGN.md §15)."""
         sp = sampling if sampling is not None else GREEDY
         req = Request(rid=next(self._rids), adapter_id=adapter_id,
                       prompt=list(prompt_tokens),
                       max_new_tokens=sp.max_new_tokens, sampling=sp,
-                      arrival=time.time())
+                      arrival=time.time(), tenant=tenant,
+                      deadline_s=deadline_s)
         self.engine.submit(req)
         handle = GenerationHandle(self, req)
         self._handles[req.rid] = handle
         return handle
+
+    # ``submit`` is the historical name for the session-less entry point;
+    # keep it as an alias so callers reading the paper-facing docs
+    # (``ForkServer.submit(..., deadline_s=...)``) land on generate().
+    submit = generate
 
     # --------------------------------------------------------------- pump
     def poll(self) -> List[TokenEvent]:

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.config import ModelConfig, ServeConfig
 from repro.serving.executor import PagedExecutor, pool_bytes
+from repro.serving.fairshare import make_policy
 from repro.serving.pool import PagePool
 from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
 from repro.serving.sampling import GREEDY, SamplingParams
@@ -58,6 +59,14 @@ class Request:
     arrival: float = 0.0
     # token-selection policy; None -> greedy argmax (the seed behaviour)
     sampling: Optional[SamplingParams] = None
+    # multi-tenant admission (DESIGN.md §15): the tenant this request
+    # bills against, and an optional queueing deadline — a request still
+    # WAITING deadline_s after arrival finishes with
+    # ``finish_reason="timeout"`` instead of queueing forever.
+    tenant: str = "default"
+    deadline_s: float = 0.0
+    admitted_at: float = 0.0      # when admission moved it to running
+    retry_after_s: float = 0.0    # backoff hint set when shed (HTTP 429)
     # context-only request (AgentSession prefill): generates nothing, its
     # product is the cache; excluded from tasks_done
     is_context: bool = False
@@ -166,6 +175,19 @@ class Engine:
         self.preemptions = 0          # demote-under-pressure events
         self.rejected = 0             # requests refused at admission
         self.stalled = 0              # requests failed by stall detection
+        self.timeouts = 0             # waiting requests past deadline_s
+        self.shed = 0                 # requests rejected by overload bounds
+        # pluggable admission (DESIGN.md §15): FIFO (seed behaviour) or
+        # weighted fair share across tenants; the policy probes prefix-hit
+        # probability through the radix tree and per-tenant pinned pages
+        # through the session-pin accounting below
+        self.tenant_pinned_pages: Dict[str, int] = {}
+        self.policy = make_policy(
+            sc, probe_hit=self.prefix_hit_fraction,
+            pinned_pages=lambda t: self.tenant_pinned_pages.get(t, 0))
+        # admission-wait distribution (ms): bounded window for p50/p99 —
+        # same O(1)-memory pattern as decode_batch_hist
+        self._admission_waits = collections.deque(maxlen=2048)
         self._no_progress = 0         # consecutive zero-progress steps
         self.peak_base_pages = 0
         self.peak_res_pages = 0
@@ -218,29 +240,59 @@ class Engine:
             self.tree.unlock_path(path)
         req.fork = None
 
+    # ------------------------------------------------------ admission probe
+    def prefix_hit_fraction(self, req: Request) -> float:
+        """Fraction of ``req.prompt`` the radix cache already covers —
+        the admission policy's prefix-hit probability (a request landing
+        on warm cache is cheaper; admit it sooner).  Read-only walk: no
+        locks taken, no host→device promotion paid (``promote=False``),
+        so probing a request never moves bytes."""
+        if not req.prompt:
+            return 0.0
+        if self.mode == "forkkv":
+            _, matched, _ = self.dual.base.match_prefix(
+                req.prompt, promote=False)
+        elif self.mode == "prefix":
+            _, matched, _ = self.forest.tree(req.adapter_id).match_prefix(
+                req.prompt, promote=False)
+        else:
+            _, matched, _ = self.tree.match_prefix(req.prompt,
+                                                   promote=False)
+        return matched / len(req.prompt)
+
     # ------------------------------------------------------- session pins
-    def pin_prefix(self, tokens: Sequence[int], adapter_id: int = 0):
+    def pin_prefix(self, tokens: Sequence[int], adapter_id: int = 0,
+                   tenant: str = "default"):
         """Pin the cached prefix of ``tokens`` against eviction for a
         session's lifetime (DESIGN.md §11).  Distinct from the transient
         per-request locks taken during admission: a pin outlives any one
         request and is released only by :meth:`unpin`.  Returns an opaque
-        handle."""
+        handle.  ``tenant`` bills the pinned pages against that tenant's
+        ``tenant_max_pinned_pages`` admission budget (DESIGN.md §15)."""
         if self.mode == "forkkv":
-            return ("forkkv", adapter_id,
-                    self.dual.pin(tokens, adapter_id))
-        if self.mode == "prefix":
-            return ("prefix", adapter_id,
-                    self.forest.pin(adapter_id, tokens))
-        return ("full_reuse", adapter_id, self.tree.pin(tokens))
+            inner = self.dual.pin(tokens, adapter_id)
+            pages = (sum(len(n.pages) for n in inner[0]) +
+                     sum(len(n.pages) for n in inner[1]))
+        elif self.mode == "prefix":
+            inner = self.forest.pin(adapter_id, tokens)
+            pages = sum(len(n.pages) for n in inner[0])
+        else:
+            inner = self.tree.pin(tokens)
+            pages = sum(len(n.pages) for n in inner[0])
+        self.tenant_pinned_pages[tenant] = \
+            self.tenant_pinned_pages.get(tenant, 0) + pages
+        return (self.mode, adapter_id, inner, tenant, pages)
 
     def unpin(self, handle) -> None:
-        mode, adapter_id, inner = handle
+        mode, adapter_id, inner, tenant, pages = handle
         if mode == "forkkv":
             self.dual.unpin(inner, adapter_id)
         elif mode == "prefix":
             self.forest.unpin(adapter_id, inner[0])
         else:
             self.tree.unpin(inner[0])
+        self.tenant_pinned_pages[tenant] = max(
+            0, self.tenant_pinned_pages.get(tenant, 0) - pages)
 
     def _evict(self, pool: PagePool, n: int) -> int:
         tiered = getattr(pool, "is_tiered", False)
@@ -486,6 +538,7 @@ class Engine:
         self._release_lock(req)
         self.running.remove(req)
         self.done.append(req)
+        self.policy.on_finish(req, req.finished_at)
 
     # ------------------------------------------------- broadcast fork
     def _try_broadcast(self) -> bool:
@@ -657,24 +710,74 @@ class Engine:
                 self._finish(r, reason="stop")
         return True
 
+    # ----------------------------------------------------- refuse helpers
+    def _refuse(self, req: Request, reason: str, error: str,
+                retry_after: float = 0.0, timeout: bool = False) -> None:
+        """Finish a never-admitted waiting request (reject/shed/timeout)."""
+        req.state = "done"
+        req.finish_reason = reason
+        req.error = error
+        req.retry_after_s = retry_after
+        req.finished_at = time.time()
+        self.done.append(req)
+        self.policy.on_reject(req, req.finished_at, timeout=timeout)
+
+    def _expire_and_shed(self, now: float) -> bool:
+        """Deadline sweep + overload shedding over the waiting queue
+        (DESIGN.md §15).  Deadlines apply under EVERY policy: a request
+        still waiting ``deadline_s`` after arrival finishes with
+        ``finish_reason="timeout"`` instead of queueing forever.  The
+        policy then names overload victims (queue depth / wait bounds),
+        finished as ``rejected`` with a retry-after hint."""
+        progress = False
+        for req in [r for r in self.waiting
+                    if r.deadline_s > 0 and now - r.arrival > r.deadline_s]:
+            self.waiting.remove(req)
+            self._refuse(req, "timeout",
+                         f"timeout: request {req.rid} waited "
+                         f"{now - req.arrival:.3f}s > deadline "
+                         f"{req.deadline_s:.3f}s", timeout=True)
+            self.timeouts += 1
+            progress = True
+        for req, retry_after in self.policy.shed(self.waiting, now):
+            self.waiting.remove(req)
+            self._refuse(req, "rejected",
+                         f"rejected: overloaded (queue depth "
+                         f"{len(self.waiting) + 1}, tenant {req.tenant}); "
+                         f"retry after {retry_after:.1f}s",
+                         retry_after=retry_after)
+            self.rejected += 1
+            self.shed += 1
+            progress = True
+        return progress
+
     # --------------------------------------------------------------- step
     def step(self) -> None:
         self.steps += 1
-        progress = False
-        # admit
+        now = time.time()
+        progress = self._expire_and_shed(now)
+        # admit, in policy order (FIFO = the seed behaviour: strict
+        # arrival order, stop at the first request that does not fit)
         while self.waiting and len(self.running) < self.sc.max_batch:
-            req = self.waiting[0]
+            req = self.policy.select(self.waiting, now)
+            if req is None:               # every waiting tenant over budget
+                break
             admitted = self._try_admit(req)
             if admitted is None:          # impossible request: reject, keep
-                self.waiting.pop(0)       # the engine alive for the rest
-                self.done.append(req)
+                self.waiting.remove(req)  # the engine alive for the rest
+                self.done.append(req)     # (_try_admit already finished it)
+                self.policy.on_reject(req, now)
                 self.rejected += 1
                 progress = True
                 continue
             if not admitted:
                 break
-            self.waiting.pop(0)
+            self.waiting.remove(req)
             self.running.append(req)
+            req.admitted_at = time.time()
+            self._admission_waits.append(
+                (req.admitted_at - req.arrival) * 1e3)
+            self.policy.on_admit(req, req.admitted_at)
             progress = True
             if req.state == "decode" and req.max_new_tokens == 0:
                 # fully-cached context-only request: nothing to compute
@@ -714,6 +817,7 @@ class Engine:
                     f"base pages free)")
                 head.finished_at = time.time()
                 self.done.append(head)
+                self.policy.on_reject(head, head.finished_at)
                 self.stalled += 1
                 self._no_progress = 0
         else:
@@ -820,6 +924,19 @@ class Engine:
             "preemptions": self.preemptions,
             "rejected": self.rejected,
             "stalled": self.stalled,
+            # multi-tenant admission (DESIGN.md §15): live queue state,
+            # admission-wait distribution over a bounded recent window,
+            # and per-tenant accept/reject/budget accounting
+            "admission": self.policy.name,
+            "queue_depth": len(self.waiting),
+            "admission_wait_p50_ms": _pct(sorted(self._admission_waits),
+                                          0.50),
+            "admission_wait_p99_ms": _pct(sorted(self._admission_waits),
+                                          0.99),
+            "timeouts": self.timeouts,
+            "shed": self.shed,
+            "tenants": self.policy.snapshot(),
+            "tenant_pinned_pages": dict(self.tenant_pinned_pages),
             # step-phase wall clock + compiled-variant probe (DESIGN.md §12)
             "prefill_ms": self.prefill_ms,
             "decode_ms": self.decode_ms,

@@ -52,7 +52,7 @@ def _adjust_chain(node: Optional["Node"], attr: str, delta: int) -> None:
 
 class Node:
     __slots__ = ("key", "pages", "children", "parent", "last_access",
-                 "lock_ref", "pin_ref", "tier")
+                 "lock_ref", "pin_ref", "tier", "warm")
 
     def __init__(self, key: Tuple[int, ...], pages: List[int],
                  parent: Optional["Node"]):
@@ -67,6 +67,11 @@ class Node:
                                         # (DESIGN.md §11) — blocks eviction
                                         # AND demotion for the session's life
         self.tier = "device"            # device | host
+        self.warm = False               # was ever session-pinned: after the
+                                        # pin drops, the context stays ranked
+                                        # ABOVE cold cache in eviction order
+                                        # (DESIGN.md §15) until it is
+                                        # demoted/evicted once
 
 
 class RadixTree:
@@ -171,6 +176,7 @@ class RadixTree:
         head.last_access = child.last_access
         head.lock_ref = child.lock_ref       # locks cover the whole path
         head.pin_ref = child.pin_ref         # ...and so do session pins
+        head.warm = child.warm               # ...and the warmth marker
         head.tier = child.tier
         if head.tier == "host" and getattr(self.pool, "is_tiered", False):
             self.pool.retarget(head.pages, head)   # handles moved to head
@@ -208,6 +214,11 @@ class RadixTree:
         _, matched, path = self.match_prefix(tokens)
         # pins cover the whole path, same convention as locks
         _adjust_chain(path[-1], "pin_ref", +1)
+        # session-aware eviction rank (DESIGN.md §15): mark the pinned
+        # context warm, so after unpin it still outranks cold cache in
+        # LRU order — an agent tree's context is the likeliest re-hit
+        for node in path:
+            node.warm = True
         return path, matched
 
     def unpin(self, path: List[Node]) -> None:
@@ -284,7 +295,10 @@ class RadixTree:
                       and id(l) not in skipped]
             if not leaves:
                 break
-            victim = min(leaves, key=lambda n: n.last_access)
+            # cold cache first: unpinned-but-warm session contexts rank
+            # above never-pinned nodes, falling back to plain LRU within
+            # each class (DESIGN.md §15)
+            victim = min(leaves, key=lambda n: (n.warm, n.last_access))
             got = _evict_one(self, victim)
             if got == 0:
                 skipped.add(id(victim))
@@ -320,6 +334,8 @@ def _evict_one(owner, victim: Node) -> int:
     """
     pool = owner.pool
     n = len(victim.pages)
+    victim.warm = False          # a pushed-out context spent its warmth:
+                                 # next time it competes as plain LRU
     if getattr(pool, "is_tiered", False):
         if pool.demote_node(victim):
             owner.demoted_pages += n
@@ -405,7 +421,7 @@ class ResidualForest:
                                   and id(l) not in skipped)
             if not candidates:
                 break
-            victim = min(candidates, key=lambda n: n.last_access)
+            victim = min(candidates, key=lambda n: (n.warm, n.last_access))
             got = _evict_one(self, victim)
             if got == 0:
                 skipped.add(id(victim))

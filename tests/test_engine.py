@@ -248,3 +248,100 @@ if HAVE_HYPOTHESIS:
 else:
     def test_property_engine_skipped_without_hypothesis():
         pytest.importorskip("hypothesis")
+
+
+# ------------------------------------------------ admission control (§15)
+def make_admission_engine(model, **kw):
+    from repro.core.config import ServeConfig
+    cfg, params, lora = model
+    base = dict(page_size=16, max_pages=256, max_batch=4,
+                max_prefill_tokens=64, mode="forkkv", max_pages_per_req=12)
+    base.update(kw)
+    return Engine(cfg, params, lora, ServeConfig(**base)), cfg
+
+
+def test_deadline_times_out_waiting_request(model):
+    """Regression: a request still waiting past its deadline finishes
+    with finish_reason="timeout"; admitted work is untouched."""
+    eng, cfg = make_admission_engine(model, max_batch=1)
+    rng = np.random.default_rng(0)
+    a = Request(rid=1, adapter_id=0,
+                prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                max_new_tokens=4)
+    b = Request(rid=2, adapter_id=1,
+                prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                max_new_tokens=4, deadline_s=0.5)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()                      # admits a (batch slot 1 of 1)
+    assert a in eng.running and b in eng.waiting
+    b.arrival -= 1.0                # age b past its 0.5s deadline
+    eng.step()
+    assert b.state == "done" and b.finish_reason == "timeout"
+    assert b.error.startswith("timeout") and eng.timeouts == 1
+    while a.state != "done":
+        eng.step()
+    assert a.finish_reason == "length"
+    m = eng.metrics()
+    assert m["timeouts"] == 1 and m["tenants"]["default"]["timeouts"] == 1
+
+
+def test_shedding_fires_deterministically_at_queue_bound(model):
+    """Overload: with max_queue_depth=2, a burst of 6 sheds exactly the
+    newest arrivals beyond the bound — same queue, same victims."""
+    eng, cfg = make_admission_engine(model, max_batch=1, max_queue_depth=2)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, adapter_id=0,
+                    prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                    max_new_tokens=2)
+            for i in range(1, 7)]
+    for i, r in enumerate(reqs):
+        eng.submit(r)
+        r.arrival = float(i)        # explicit arrival order (no clock ties)
+    eng.step()
+    # depth 6 > bound 2 -> shed the 4 newest BEFORE admitting, leaving
+    # one admitted + two waiting
+    shed = [r for r in reqs if r.finish_reason == "rejected"]
+    assert sorted(r.rid for r in shed) == [3, 4, 5, 6]
+    assert eng.shed == 4 and eng.rejected == 4
+    assert all(r.retry_after_s >= 1.0 for r in shed)
+    assert all("overloaded" in r.error for r in shed)
+    survivors = {r.rid for r in eng.running} | {r.rid for r in eng.waiting}
+    assert survivors == {1, 2}
+    while any(r.state != "done" for r in reqs):
+        eng.step()
+    assert [r.finish_reason for r in reqs[:2]] == ["length", "length"]
+    assert eng.metrics()["shed"] == 4
+
+
+def test_fairshare_light_tenant_admission_not_starved(model):
+    """A hog burst must not starve a light tenant under fair share:
+    WFQ admits the light request within the first batch, while FIFO
+    makes it wait for the whole hog backlog."""
+    waits = {}
+    for admission in ("fifo", "fairshare"):
+        eng, cfg = make_admission_engine(model, max_batch=2,
+                                         admission=admission)
+        rng = np.random.default_rng(2)
+        hogs = [Request(rid=i, adapter_id=0, tenant="hog",
+                        prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                        max_new_tokens=2)
+                for i in range(1, 7)]
+        light = Request(rid=9, adapter_id=1, tenant="light",
+                        prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                        max_new_tokens=2)
+        for r in hogs + [light]:    # submission order: hogs, then light
+            eng.submit(r)
+        while any(r.state != "done" for r in hogs + [light]):
+            eng.step()
+        admitted_before_light = sum(
+            1 for r in hogs if r.admitted_at < light.admitted_at)
+        waits[admission] = admitted_before_light
+        snap = eng.metrics()["tenants"]
+        assert snap["light"]["accepted"] == 1
+        assert snap["hog"]["accepted"] == 6
+    # FIFO admits light only after every hog; under fair share the hog's
+    # first admission raises its virtual time, so light (vtime 0) wins
+    # the very next admission slot.
+    assert waits["fifo"] == 6
+    assert waits["fairshare"] <= 1

@@ -1,0 +1,167 @@
+"""Admission-policy unit tests: WFQ ordering, SRPT bias, aging, budgets,
+deterministic shedding (DESIGN.md §15).  Pure control plane — no model,
+no jax arrays."""
+import dataclasses
+
+import pytest
+
+from repro.core.config import ServeConfig
+from repro.serving.fairshare import (FairShareAdmission, FIFOAdmission,
+                                     make_policy)
+
+
+@dataclasses.dataclass
+class FakeReq:
+    rid: int
+    tenant: str = "default"
+    prompt: tuple = tuple(range(32))
+    max_new_tokens: int = 8
+    arrival: float = 0.0
+
+
+def sc(**kw) -> ServeConfig:
+    return ServeConfig(page_size=16, max_pages=64, max_batch=4, **kw)
+
+
+def test_make_policy_dispatch():
+    assert isinstance(make_policy(sc()), FIFOAdmission)
+    assert isinstance(make_policy(sc(admission="fairshare")),
+                      FairShareAdmission)
+    with pytest.raises(ValueError):
+        make_policy(sc(admission="lottery"))
+
+
+def test_fifo_is_arrival_order():
+    pol = make_policy(sc())
+    waiting = [FakeReq(rid=1, arrival=0.0), FakeReq(rid=2, arrival=1.0)]
+    assert pol.select(waiting, now=2.0).rid == 1
+
+
+def test_fifo_head_of_line_blocks_on_budget():
+    pol = make_policy(sc(tenant_max_concurrent=1))
+    pol.tenant("hog").concurrent = 1
+    waiting = [FakeReq(rid=1, tenant="hog"),
+               FakeReq(rid=2, tenant="light")]
+    # FIFO is FIFO: the over-budget head blocks everyone behind it
+    assert pol.select(waiting, now=0.0) is None
+
+
+def test_fairshare_skips_over_budget_tenant():
+    pol = make_policy(sc(admission="fairshare", tenant_max_concurrent=1))
+    pol.tenant("hog").concurrent = 1
+    waiting = [FakeReq(rid=1, tenant="hog"),
+               FakeReq(rid=2, tenant="light")]
+    assert pol.select(waiting, now=0.0).rid == 2
+
+
+def test_wfq_prefers_underserved_tenant():
+    pol = make_policy(sc(admission="fairshare"))
+    pol.tenant("hog").service = 10_000.0       # hog has eaten a lot
+    waiting = [FakeReq(rid=1, tenant="hog", arrival=0.0),
+               FakeReq(rid=2, tenant="light", arrival=5.0)]
+    # light arrived later but has zero virtual time -> wins
+    assert pol.select(waiting, now=5.0).rid == 2
+
+
+def test_weights_scale_virtual_time():
+    pol = make_policy(sc(admission="fairshare",
+                         tenant_weights=(("premium", 4.0),)))
+    pol.tenant("premium").service = 400.0      # vtime 100
+    pol.tenant("basic").service = 200.0        # vtime 200
+    waiting = [FakeReq(rid=1, tenant="basic"),
+               FakeReq(rid=2, tenant="premium")]
+    assert pol.select(waiting, now=0.0).rid == 2
+
+
+def test_srpt_prefers_short_request_within_tenant():
+    pol = make_policy(sc(admission="fairshare", fair_aging_tokens_per_s=0))
+    waiting = [FakeReq(rid=1, prompt=tuple(range(100)), max_new_tokens=64),
+               FakeReq(rid=2, prompt=tuple(range(8)), max_new_tokens=4)]
+    assert pol.select(waiting, now=0.0).rid == 2
+
+
+def test_prefix_hit_discounts_cost():
+    # identical requests except rid=2's prompt is fully cached
+    pol = FairShareAdmission(sc(admission="fairshare"),
+                             probe_hit=lambda r: 1.0 if r.rid == 2 else 0.0)
+    waiting = [FakeReq(rid=1), FakeReq(rid=2)]
+    assert pol.cost(waiting[1]) < pol.cost(waiting[0])
+    assert pol.select(waiting, now=0.0).rid == 2
+
+
+def test_aging_bounds_starvation():
+    pol = make_policy(sc(admission="fairshare", fair_srpt_weight=1.0,
+                         fair_aging_tokens_per_s=50.0))
+    old_big = FakeReq(rid=1, prompt=tuple(range(500)),
+                      max_new_tokens=100, arrival=0.0)
+    # a stream of fresh small requests (cost 8, zero wait) would starve
+    # the big one under pure SRPT; aging credit (50 tokens/s) closes the
+    # 592-token gap after ~12s of waiting.
+    assert pol.select([old_big, FakeReq(rid=2, prompt=(1, 2, 3, 4),
+                                        max_new_tokens=4, arrival=5.0)],
+                      now=5.0).rid == 2
+    assert pol.select([old_big, FakeReq(rid=3, prompt=(1, 2, 3, 4),
+                                        max_new_tokens=4, arrival=13.0)],
+                      now=13.0).rid == 1
+
+
+def test_admit_finish_accounting():
+    pol = make_policy(sc(admission="fairshare"))
+    req = FakeReq(rid=1, tenant="t", prompt=tuple(range(10)),
+                  max_new_tokens=6)
+    pol.on_admit(req, now=0.0)
+    st = pol.tenant("t")
+    assert (st.concurrent, st.tokens_in_flight, st.accepted) == (1, 16, 1)
+    assert st.service == pytest.approx(16.0)   # zero hit prob -> full cost
+    pol.on_finish(req, now=1.0)
+    assert (st.concurrent, st.tokens_in_flight) == (0, 0)
+    snap = pol.snapshot()["t"]
+    assert snap["accepted"] == 1 and snap["vtime"] == pytest.approx(16.0)
+
+
+def test_shed_wait_bound():
+    pol = make_policy(sc(max_queue_wait_s=2.0))
+    waiting = [FakeReq(rid=1, arrival=0.0), FakeReq(rid=2, arrival=9.0)]
+    victims = pol.shed(waiting, now=10.0)
+    assert [r.rid for r, _ in victims] == [1]
+    assert all(ra >= 1.0 for _, ra in victims)
+
+
+def test_shed_depth_bound_fifo_newest_first():
+    pol = make_policy(sc(max_queue_depth=2))
+    waiting = [FakeReq(rid=i, arrival=float(i)) for i in range(1, 6)]
+    victims = pol.shed(waiting, now=10.0)
+    # 5 waiting, bound 2 -> shed 3 victims, newest arrivals first
+    assert [r.rid for r, _ in victims] == [5, 4, 3]
+    # deterministic: same queue, same clock, same victims
+    assert [r.rid for r, _ in pol.shed(waiting, now=10.0)] == [5, 4, 3]
+
+
+def test_shed_depth_bound_fairshare_worst_score_first():
+    pol = make_policy(sc(admission="fairshare", max_queue_depth=1,
+                         fair_aging_tokens_per_s=0))
+    cheap = FakeReq(rid=1, prompt=tuple(range(4)), max_new_tokens=2)
+    dear = FakeReq(rid=2, prompt=tuple(range(400)), max_new_tokens=64)
+    victims = pol.shed([cheap, dear], now=0.0)
+    # the request fair share would admit LAST is shed first
+    assert [r.rid for r, _ in victims] == [2]
+
+
+def test_retry_after_scales_with_excess_depth():
+    pol = make_policy(sc(max_queue_depth=2))
+    waiting = [FakeReq(rid=i, arrival=float(i)) for i in range(1, 13)]
+    victims = pol.shed(waiting, now=20.0)
+    # first victim sees the full backlog (depth 12, bound 2 -> 5s)
+    assert victims[0][1] == pytest.approx(0.5 * (12 - 2))
+    # hints shrink as the queue drains and never drop below 1s
+    assert victims[-1][1] >= 1.0
+    hints = [ra for _, ra in victims]
+    assert hints == sorted(hints, reverse=True)
+
+
+def test_reject_counters_split_timeouts():
+    pol = make_policy(sc())
+    pol.on_reject(FakeReq(rid=1, tenant="t"), now=0.0)
+    pol.on_reject(FakeReq(rid=2, tenant="t"), now=0.0, timeout=True)
+    st = pol.tenant("t")
+    assert (st.rejected, st.timeouts) == (1, 1)

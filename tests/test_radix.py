@@ -195,3 +195,30 @@ if HAVE_HYPOTHESIS:
 else:
     def test_property_radix_skipped_without_hypothesis():
         pytest.importorskip("hypothesis")
+
+
+def test_warm_context_outranks_cold_cache_in_eviction():
+    """Session-aware eviction (DESIGN.md §15): an unpinned-but-warm
+    session context is evicted only after cold cache, even when the cold
+    entry is more recently used."""
+    t, pool = make_tree(pages=4)
+    warm_toks = [1] * PAGE
+    cold_toks = [2] * PAGE
+    pw = insert_seq(t, pool, warm_toks)
+    pc = insert_seq(t, pool, cold_toks)
+    pool.decref(pw)
+    pool.decref(pc)
+    path, matched = t.pin(warm_toks)     # session pins its context...
+    assert matched == PAGE
+    t.unpin(path)                        # ...and closes: warm, unpinned
+    t.match_prefix(cold_toks)            # cold entry is now MRU
+    t.evict(1)
+    _, mw, _ = t.match_prefix(warm_toks)
+    _, mc, _ = t.match_prefix(cold_toks)
+    # pure LRU would have evicted the warm context; warmth outranks it
+    assert mw == PAGE and mc == 0
+    # warmth is a rank, not a lock: under continued pressure the warm
+    # context still goes (and a re-inserted entry starts cold again)
+    t.evict(1)
+    _, mw2, _ = t.match_prefix(warm_toks)
+    assert mw2 == 0
