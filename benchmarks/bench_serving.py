@@ -73,6 +73,20 @@ TENANT_SMOKE = dict(n_light=4, light_rate_rps=8.0, n_hog_each=16,
                     max_new=4, max_pages=320, max_batch=4,
                     max_prefill_tokens=128, n_adapters=2, seed=0)
 
+# Speculative regime (--speculate, DESIGN.md §16): a repetitive agent-tree
+# trace — n_distinct trajectories, each replayed several times under
+# Poisson arrivals (sibling forks re-running a shared plan).  The first
+# pass over each trajectory warms the ngram cache at finish; every replay
+# then proposes the cached continuation and the verify row commits k+1
+# tokens per step at ~100% acceptance.  Longer decodes (max_new) than the
+# batching regime so per-token latency dominates the measurement.
+SPEC_FULL = dict(n_requests=18, n_distinct=3, rate_rps=12.0, prompt_lo=64,
+                 prompt_hi=96, max_new=16, max_pages=512, max_batch=4,
+                 max_prefill_tokens=128, n_adapters=3, seed=0, spec_k=4)
+SPEC_SMOKE = dict(n_requests=9, n_distinct=3, rate_rps=12.0, prompt_lo=64,
+                  prompt_hi=96, max_new=12, max_pages=320, max_batch=4,
+                  max_prefill_tokens=128, n_adapters=3, seed=0, spec_k=4)
+
 
 def _workload(knobs: Dict, vocab: int, salt: int = 0):
     """Seeded open-loop trace: (arrival_s, adapter_id, prompt) per
@@ -334,6 +348,152 @@ def run_tenants(smoke: bool, n_tenants: int) -> Dict:
             "sides": sides, "comparison": comparison, "verdict": verdict}
 
 
+def _spec_workload(knobs: Dict, vocab: int, salt: int = 0):
+    """Seeded repetitive trace: ``n_distinct`` trajectory prompts, each
+    request replaying trajectory ``i % n_distinct`` (Poisson arrivals).
+    Same salt discipline as :func:`_workload` — warmup replays use fresh
+    token content so neither the radix cache nor the ngram cache leaks
+    warmup state into the measured run."""
+    rng = np.random.default_rng(knobs["seed"] + 29)
+    rng_tok = np.random.default_rng(knobs["seed"] + 7919 * (salt + 1) + 29)
+    gaps = rng.exponential(1.0 / knobs["rate_rps"], knobs["n_requests"])
+    arrivals = np.cumsum(gaps)
+    protos = []
+    for _ in range(knobs["n_distinct"]):
+        plen = int(rng.integers(knobs["prompt_lo"], knobs["prompt_hi"] + 1))
+        protos.append(list(rng_tok.integers(0, vocab, plen)))
+    return [(float(arrivals[i]), i % knobs["n_adapters"],
+             protos[i % knobs["n_distinct"]])
+            for i in range(knobs["n_requests"])]
+
+
+def _run_spec_side(speculate: bool, knobs: Dict) -> Dict:
+    cfg, params, lora = get_tiny_model(rank=8,
+                                       n_adapters=knobs["n_adapters"])
+    sc = ServeConfig(page_size=16, max_pages=knobs["max_pages"],
+                     max_batch=knobs["max_batch"],
+                     max_prefill_tokens=knobs["max_prefill_tokens"],
+                     mode="forkkv", max_pages_per_req=16,
+                     mixed_batching=True, speculate=speculate,
+                     spec_k=knobs["spec_k"], spec_proposer="ngram_cache")
+    server = ForkServer(cfg, params, lora, sc)
+    sp = SamplingParams(max_new_tokens=knobs["max_new"])
+
+    def _replay(trace):
+        t0 = time.perf_counter()
+        handles: List = []
+        i = 0
+        while i < len(trace):
+            now = time.perf_counter() - t0
+            while i < len(trace) and trace[i][0] <= now:
+                _, aid, prompt = trace[i]
+                handles.append(server.generate(aid, list(prompt), sp))
+                i += 1
+            if i < len(trace) and not server.engine.running \
+                    and not server.engine.waiting:
+                time.sleep(min(0.002, max(0.0, trace[i][0] - now)))
+            else:
+                server.poll()
+        outs = server.wait(handles)
+        return outs, time.perf_counter() - t0
+
+    prev = -1
+    for salt in (1, 2, 3):
+        _replay(_spec_workload(knobs, cfg.vocab_size, salt=salt))
+        size = (server.engine.executor._prefill._cache_size() +
+                server.engine.executor._decode._cache_size())
+        if size == prev:
+            break
+        prev = size
+    m0 = server.metrics()
+
+    # two measured replays with fresh token content, keep the faster —
+    # same CPU-noise discipline as the tenant experiment (the arrival
+    # schedule bounds the wall clock, so single replays sit within
+    # scheduler jitter of each other)
+    best = None
+    for salt in (0, 4):
+        outs, wall_s = _replay(_spec_workload(knobs, cfg.vocab_size,
+                                              salt=salt))
+        if best is None or wall_s < best[1]:
+            best = (outs, wall_s)
+    outs, wall_s = best
+
+    assert all(o.finish_reason == "length" for o in outs), \
+        [o.finish_reason for o in outs]
+    gen_tokens = sum(len(o.tokens) for o in outs)
+    ttfts = sorted(o.metrics["ttft_ms"] for o in outs)
+    tpots = sorted(o.metrics["tpot_ms"] for o in outs)
+    proposed = sum(o.metrics["spec_proposed"] for o in outs)
+    accepted = sum(o.metrics["spec_accepted"] for o in outs)
+
+    def _pct(vals: List[float], q: float) -> float:
+        return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+
+    m = server.metrics()
+    return {
+        "speculate": speculate,
+        "requests": len(outs),
+        "wall_s": round(wall_s, 3),
+        "gen_tokens": gen_tokens,
+        "throughput_tok_s": round(gen_tokens / max(wall_s, 1e-9), 2),
+        "ttft_p50_ms": round(_pct(ttfts, 0.50), 3),
+        "ttft_p99_ms": round(_pct(ttfts, 0.99), 3),
+        "tpot_mean_ms": round(sum(tpots) / len(tpots), 3),
+        "tpot_p50_ms": round(_pct(tpots, 0.50), 3),
+        "tpot_p99_ms": round(_pct(tpots, 0.99), 3),
+        # measured-replay speculation counters (per-request, so warmup
+        # steps never pollute them)
+        "spec_proposed_tokens": proposed,
+        "spec_accepted_tokens": accepted,
+        "acceptance_rate": round(accepted / max(1, proposed), 4),
+        "spec_steps": m["spec_steps"] - m0["spec_steps"],
+        "fallback_gather_calls": m["fallback_gather_calls"] -
+        m0["fallback_gather_calls"],
+    }
+
+
+def run_speculate(smoke: bool) -> Dict:
+    """Speculation experiment (acceptance, DESIGN.md §16): on the
+    repetitive agent-tree trace, speculative decoding must cut TPOT p50
+    (multi-token commits on replayed trajectories) at >= 1.0x throughput
+    — rejected drafts cost nothing but the wider verify call."""
+    knobs = SPEC_SMOKE if smoke else SPEC_FULL
+    sides = {}
+    for spec in (True, False):
+        side = _run_spec_side(spec, knobs)
+        sides["speculate" if spec else "baseline"] = side
+        gc.collect()
+        jax.clear_caches()
+        name = "speculate" if spec else "baseline"
+        emit(f"serving.spec.{name}.tpot_p50_ms", side["tpot_p50_ms"] * 1e3,
+             f"reqs={side['requests']};tok_s={side['throughput_tok_s']};"
+             f"acceptance={side['acceptance_rate']}")
+    on, off = sides["speculate"], sides["baseline"]
+
+    def _impr(key: str) -> float:
+        return round(100.0 * (off[key] - on[key]) / max(off[key], 1e-9), 2)
+
+    comparison = {
+        "acceptance_rate": on["acceptance_rate"],
+        "tpot_p50_improvement_pct": _impr("tpot_p50_ms"),
+        "tpot_p99_improvement_pct": _impr("tpot_p99_ms"),
+        "tpot_mean_improvement_pct": _impr("tpot_mean_ms"),
+        "throughput_ratio": round(on["throughput_tok_s"] /
+                                  max(off["throughput_tok_s"], 1e-9), 4),
+    }
+    faster = comparison["tpot_p50_improvement_pct"] > 0
+    verdict = ("speculation_cuts_tpot" if faster and
+               comparison["throughput_ratio"] >= 1.0
+               else "no_tpot_improvement" if
+               comparison["throughput_ratio"] >= 1.0
+               else "throughput_regression")
+    emit("serving.spec.comparison.throughput_ratio", 0,
+         f"{comparison['throughput_ratio']:.3f};verdict={verdict}")
+    return {"knobs": dict(knobs), "baseline": off, "speculate": on,
+            "comparison": comparison, "verdict": verdict}
+
+
 def run(smoke: bool) -> Dict:
     knobs = SMOKE if smoke else FULL
     sides = {}
@@ -387,11 +547,17 @@ def main(argv=None) -> None:
                     help="also run the N-tenant fairness experiment "
                          "(1 light + N-1 hog tenants): solo vs FIFO vs "
                          "fair share, per-tenant TTFT/TPOT percentiles")
+    ap.add_argument("--speculate", action="store_true",
+                    help="also run the speculative-decoding experiment "
+                         "(repetitive agent-tree trace, spec-on vs "
+                         "spec-off TPOT + acceptance rate, DESIGN.md §16)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args([] if argv is None else argv)
     report = run(args.smoke)
     if args.tenants > 1:
         report["multi_tenant"] = run_tenants(args.smoke, args.tenants)
+    if args.speculate:
+        report["speculative"] = run_speculate(args.smoke)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"# wrote {args.out}")

@@ -70,7 +70,8 @@ print("prefill bench smoke OK:", rep["summary"])
 PY
 
 echo "== serving benchmark smoke (mixed vs phase-separated, DESIGN.md §14) =="
-python -m benchmarks.bench_serving --smoke --out BENCH_serving.smoke.json
+python -m benchmarks.bench_serving --smoke --speculate \
+  --out BENCH_serving.smoke.json
 test -s BENCH_serving.smoke.json
 python - <<'PY'
 import json
@@ -85,11 +86,22 @@ assert rep["phase_separated"]["mixed_steps"] == 0
 assert rep["comparison"]["throughput_ratio"] > 0
 print("serving bench smoke OK:", rep["comparison"],
       "verdict:", rep["verdict"])
+# speculative block (DESIGN.md §16): the repetitive trace must really
+# speculate — drafts proposed AND accepted — with zero gather fallbacks
+spec = rep["speculative"]
+assert spec["speculate"]["spec_proposed_tokens"] > 0, spec
+assert spec["speculate"]["spec_accepted_tokens"] > 0, spec
+assert spec["comparison"]["acceptance_rate"] > 0, spec
+assert spec["speculate"]["fallback_gather_calls"] == 0, spec
+assert spec["baseline"]["spec_steps"] == 0
+print("speculative bench smoke OK:", spec["comparison"],
+      "verdict:", spec["verdict"])
 PY
 
 echo "== HTTP frontend smoke (SSE streaming + fork parity, DESIGN.md §15) =="
 python -m repro.launch.serve --http --port 0 --max-pages 256 \
-  --admission fairshare > /tmp/forkkv_http.log 2>&1 &
+  --admission fairshare --speculate --spec-k 3 --proposer ngram_cache \
+  > /tmp/forkkv_http.log 2>&1 &
 HTTP_PID=$!
 trap 'kill $HTTP_PID 2>/dev/null || true' EXIT
 for _ in $(seq 120); do
@@ -109,28 +121,38 @@ client = ForkClient(port=int(os.environ["HTTP_PORT"]))
 assert client.healthz()
 rng = np.random.default_rng(0)
 ctx = [int(t) for t in rng.integers(0, 1000, 96)]
-instr = [int(t) for t in rng.integers(0, 1000, 8)]
+instr = ctx[:8]   # re-quotes the context, so the proposer has material
 
-# streamed SSE completion through a forked session...
+# streamed SSE completions through a forked session, SPECULATION ON
+# (--speculate on the server); the identical second fork replays the
+# first's trajectory out of the warmed ngram cache
 sid = client.create_session(ctx, adapter_id=0)
-events = list(client.stream_fork(sid, instr, adapter_id=1,
-                                 max_new_tokens=8))
-streamed = [e["token"] for e in events if not e.get("finished")]
-assert events[-1]["finished"] and len(streamed) == 8, events[-1]
-assert streamed == events[-1]["tokens"]
+runs = []
+for _ in range(2):
+    events = list(client.stream_fork(sid, instr, adapter_id=1,
+                                     max_new_tokens=8))
+    streamed = [e["token"] for e in events if not e.get("finished")]
+    assert events[-1]["finished"] and len(streamed) == 8, events[-1]
+    assert streamed == events[-1]["tokens"]
+    runs.append(streamed)
 client.close_session(sid)
+assert runs[0] == runs[1], runs
 
-# ...must match the in-process API token-for-token (greedy), with the
-# paged path never falling back to gather
+# ...must match the speculation-OFF in-process API token-for-token
+# (greedy ON==OFF parity over HTTP), with the paged path never falling
+# back to gather
 server, _ = build_server("forkkv", max_pages=256, admission="fairshare")
 sess = server.session(ctx, adapter_id=0)
 expected = sess.fork(1, instr,
                      SamplingParams(max_new_tokens=8)).result().tokens
-assert streamed == expected, (streamed, expected)
+assert runs[0] == expected, (runs[0], expected)
 m = client.metrics()
 assert m["fallback_gather_calls"] == 0, m["fallback_gather_calls"]
 assert m["queue_depth"] == 0 and m["admission"] == "fairshare"
-print("http smoke OK: parity", len(streamed), "tokens,",
+assert m["speculate"] and m["spec_accepted_tokens"] > 0, \
+    (m["speculate"], m["spec_proposed_tokens"], m["spec_accepted_tokens"])
+print("http smoke OK: spec-on parity", len(runs[0]), "tokens,",
+      "acceptance:", round(m["spec_acceptance_rate"], 3),
       "tenants:", list(m["tenants"]))
 PY
 kill $HTTP_PID

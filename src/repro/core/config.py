@@ -294,3 +294,18 @@ class ServeConfig:
     # ``finish_reason="rejected"`` + a retry-after hint (HTTP 429).
     max_queue_depth: int = 0
     max_queue_wait_s: float = 0.0
+    # ---- speculative decoding on CoW forks (DESIGN.md §16) ----------------
+    # draft-free speculation: propose up to spec_k tokens per decode step
+    # (prompt-lookup / n-gram cache), verify them in ONE mixed-grid pass
+    # (a q_len=k+1 row), commit the accepted prefix, drop the rest via CoW
+    # refcounts.  Greedy requests only — accepted tokens are bit-identical
+    # to the non-speculative stream.  Per-request override via
+    # ``SamplingParams.speculate``/``spec_k``.
+    speculate: bool = False
+    spec_k: int = 4                  # max drafted tokens per verify step
+    spec_proposer: str = "prompt_lookup"   # prompt_lookup | ngram_cache
+    # adaptive draft length: per-request EMA acceptance controller backs
+    # the draft cap off toward 1 when acceptance drops (speculate.py)
+    spec_adaptive: bool = True
+    spec_min_ngram: int = 2          # shortest suffix n-gram matched
+    spec_cache_entries: int = 8192   # ngram_cache bound (LRU-evicted)

@@ -35,7 +35,10 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  tenant_weights: tuple = (),
                  tenant_max_concurrent: int = 0,
                  max_queue_depth: int = 0,
-                 max_queue_wait_s: float = 0.0):
+                 max_queue_wait_s: float = 0.0,
+                 speculate: bool = False,
+                 spec_k: int = 4,
+                 spec_proposer: str = "prompt_lookup"):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -54,7 +57,9 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      tenant_weights=tuple(tenant_weights),
                      tenant_max_concurrent=tenant_max_concurrent,
                      max_queue_depth=max_queue_depth,
-                     max_queue_wait_s=max_queue_wait_s)
+                     max_queue_wait_s=max_queue_wait_s,
+                     speculate=speculate, spec_k=spec_k,
+                     spec_proposer=spec_proposer)
     return ForkServer(cfg, params, lora, sc), cfg
 
 
@@ -131,6 +136,16 @@ def main() -> None:
     ap.add_argument("--max-queue-wait-s", type=float, default=0.0,
                     help="shed waiting requests older than this many "
                          "seconds (0 = never shed on wait)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="enable draft-free speculative decoding for "
+                         "greedy requests (DESIGN.md §16)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max drafted tokens per verify row (with "
+                         "--speculate; adaptive controller may lower it)")
+    ap.add_argument("--proposer", default="prompt_lookup",
+                    choices=["prompt_lookup", "ngram_cache"],
+                    help="draft proposer: prompt self-match or the "
+                         "completed-request n-gram cache")
     ap.add_argument("--stats", action="store_true",
                     help="print step-phase wall-clock totals "
                          "(prefill/decode/sync ms), compiled decode "
@@ -155,7 +170,9 @@ def main() -> None:
         admission=args.admission, tenant_weights=tuple(weights),
         tenant_max_concurrent=args.tenant_max_concurrent,
         max_queue_depth=args.max_queue_depth,
-        max_queue_wait_s=args.max_queue_wait_s)
+        max_queue_wait_s=args.max_queue_wait_s,
+        speculate=args.speculate, spec_k=args.spec_k,
+        spec_proposer=args.proposer)
     if args.http:
         from repro.serving.frontend import HttpFrontend
         # start_background so the bound port (possibly ephemeral) can be
@@ -217,6 +234,13 @@ def main() -> None:
                   f"tpot_p50_ms={rep['tpot_p50_ms']:.1f} "
                   f"tpot_p99_ms={rep['tpot_p99_ms']:.1f}")
             em = server.metrics()
+            if em["speculate"]:
+                print(f"speculate=on proposer={em['spec_proposer']} "
+                      f"spec_steps={em['spec_steps']} "
+                      f"spec_step_share={em['spec_step_share']:.2f} "
+                      f"proposed={em['spec_proposed_tokens']} "
+                      f"accepted={em['spec_accepted_tokens']} "
+                      f"acceptance={em['spec_acceptance_rate']:.2f}")
             print(f"admission={em['admission']} "
                   f"queue_depth={em['queue_depth']} "
                   f"admission_wait_p50_ms={em['admission_wait_p50_ms']:.2f} "

@@ -54,6 +54,10 @@ class TokenEvent:
     finished: bool = False
     finish_reason: str = ""      # stop | length | rejected | stalled |
                                  # timeout
+    ts: float = 0.0              # when the token was committed (epoch s);
+                                 # a multi-token speculative commit emits
+                                 # one event per token with interpolated
+                                 # stamps, so TPOT stays honest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,14 +114,17 @@ class GenerationHandle:
         req = self._req
         out: List[TokenEvent] = []
         limit = max(0, len(req.output) - 1)
+        times = req.token_times
         for i in range(self._emitted, limit):
             out.append(TokenEvent(rid=req.rid, index=i,
-                                  token=req.output[i]))
+                                  token=req.output[i],
+                                  ts=times[i] if i < len(times) else 0.0))
         self._emitted = max(self._emitted, limit)
         if req.state == "done" and not self._terminal_sent:
             out.append(TokenEvent(rid=req.rid, index=self._emitted,
                                   token=None, finished=True,
-                                  finish_reason=req.finish_reason))
+                                  finish_reason=req.finish_reason,
+                                  ts=req.finished_at))
             self._terminal_sent = True
         self._queue.extend(out)
         return out
@@ -152,9 +159,16 @@ class GenerationHandle:
         # to the first sampled token, TPOT the per-token mean after it
         ttft_s = max(0.0, req.first_token_at - req.arrival) \
             if req.first_token_at else 0.0
-        tpot_s = (max(0.0, req.finished_at - req.first_token_at) /
-                  max(1, len(req.output) - 1)) if req.first_token_at \
-            else 0.0
+        # TPOT from the per-token commit stamps when available (multi-token
+        # speculative commits interpolate within the step); fall back to
+        # span/(n-1) for requests without stamps
+        if len(req.token_times) >= 2:
+            tpot_s = ((req.token_times[-1] - req.token_times[0]) /
+                      (len(req.token_times) - 1))
+        else:
+            tpot_s = (max(0.0, req.finished_at - req.first_token_at) /
+                      max(1, len(req.output) - 1)) if req.first_token_at \
+                else 0.0
         return RequestOutput(
             rid=req.rid, adapter_id=req.adapter_id, tokens=tokens,
             finish_reason=req.finish_reason or "length", error=req.error,
@@ -165,7 +179,9 @@ class GenerationHandle:
                      "kv_len": req.kv_len,
                      "latency_s": latency,
                      "ttft_ms": ttft_s * 1e3,
-                     "tpot_ms": tpot_s * 1e3})
+                     "tpot_ms": tpot_s * 1e3,
+                     "spec_proposed": req.spec_proposed,
+                     "spec_accepted": req.spec_accepted})
 
 
 class AgentSession:

@@ -47,6 +47,7 @@ from repro.serving.pool import PagePool
 from repro.serving.radix import DualRadixTree, RadixTree, ResidualForest
 from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import BatchPlan, IterationScheduler
+from repro.serving.speculate import AdaptiveK, make_proposer
 from repro.serving.tiers import HostTier, TieredPagePool
 
 
@@ -88,6 +89,13 @@ class Request:
     # TTFT = first_token_at - arrival, TPOT = the per-token mean after it
     first_scheduled_at: float = 0.0
     first_token_at: float = 0.0
+    # per-token wall-clock stamps, one per output token (multi-token-safe
+    # TPOT/streaming: a verify step committing k+1 tokens interpolates
+    # their stamps across the step instead of piling them on one instant)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # speculative decoding (DESIGN.md §16): per-request draft accounting
+    spec_proposed: int = 0        # drafted tokens sent to verification
+    spec_accepted: int = 0        # drafted tokens the target model kept
     prefilled_tokens: int = 0     # tokens this request actually computed
                                   # (exact int; broadcast attributes the
                                   # shared pass to its writer)
@@ -189,6 +197,19 @@ class Engine:
         # same O(1)-memory pattern as decode_batch_hist
         self._admission_waits = collections.deque(maxlen=2048)
         self._no_progress = 0         # consecutive zero-progress steps
+        # speculative decoding (DESIGN.md §16): the proposer is always
+        # constructed (cheap, host-only) — per-request SamplingParams can
+        # enable speculation even when the engine default is off — and
+        # warmed by every completed request so later forks replay their
+        # siblings' outputs.  Per-request AdaptiveK controllers back the
+        # draft length off when acceptance drops.
+        self.proposer = make_proposer(sc)
+        self._spec_ctl: Dict[int, AdaptiveK] = {}
+        self.spec_steps = 0           # iterations that ran >=1 verify row
+        self.spec_proposed = 0        # drafted tokens sent to verification
+        self.spec_accepted = 0        # drafted tokens kept
+        self.spec_committed = 0       # tokens committed by verify rows
+                                      # (accepted + one bonus per row)
         self.peak_base_pages = 0
         self.peak_res_pages = 0
         self.agent_ids_seen = set()
@@ -445,6 +466,7 @@ class Engine:
             if r.first_token_at == 0.0:
                 r.first_token_at = time.time()
             r.output.append(tok)
+            r.token_times.append(time.time())
             # the sampled token's KV is not cached yet; it will be written
             # when the decode step consumes it
             if tok in r.params.stop_token_ids:
@@ -462,6 +484,41 @@ class Engine:
         self.decode_batch_hist.append(n)
         self._decode_batch_sum += n
         self._decode_steps += 1
+
+    # ------------------------------------------- speculative proposals
+    def _spec_enabled(self, req: Request) -> bool:
+        """Speculate for this request?  Per-request SamplingParams
+        override beats the engine default; greedy only (accepted tokens
+        must be bit-identical to the sequential stream), and only under
+        mixed batching (verify rows ride the unified grid)."""
+        sp = req.params
+        on = sp.speculate if sp.speculate is not None else self.sc.speculate
+        return bool(on) and sp.greedy and self.sc.mixed_batching \
+            and not req.is_context
+
+    def _propose(self, req: Request) -> tuple:
+        """The scheduler's speculation hook (DESIGN.md §16): up to k
+        drafted continuations of the request's tokens, or () for a plain
+        decode row.  k is capped by the adaptive controller, the
+        remaining generation budget (a verify row commits at most k+1
+        tokens) and the request's page allocation (drafted KV must land
+        inside its owned pages — the CoW rollback invariant)."""
+        if not self._spec_enabled(req):
+            return ()
+        sp = req.params
+        k = sp.spec_k or self.sc.spec_k
+        if self.sc.spec_adaptive:
+            ctl = self._spec_ctl.get(req.rid)
+            if ctl is None:
+                ctl = self._spec_ctl[req.rid] = AdaptiveK(k)
+            k = min(k, ctl.k)
+        k = min(k,
+                req.max_new_tokens - len(req.output),
+                len(req.base_pages) * self.sc.page_size - req.kv_len - 1)
+        if k <= 0:
+            return ()
+        draft = self.proposer.propose(req.prompt + req.output, k)
+        return tuple(draft[:k])
 
     # ------------------------------------------------------------- decode
     def _decode_all(self) -> bool:
@@ -508,6 +565,7 @@ class Engine:
             if r.first_token_at == 0.0:   # fully-cached admission: the
                 r.first_token_at = time.time()  # first token is a decode
             r.output.append(tok)
+            r.token_times.append(time.time())
             if tok in r.params.stop_token_ids:
                 self._finish(r, reason="stop")
             elif len(r.output) >= r.max_new_tokens + 1 or \
@@ -538,6 +596,11 @@ class Engine:
         self._release_lock(req)
         self.running.remove(req)
         self.done.append(req)
+        self._spec_ctl.pop(req.rid, None)
+        if req.output and not req.is_context:
+            # warm the n-gram cache with the committed sequence so later
+            # forks replaying this trajectory get high-acceptance drafts
+            self.proposer.observe(req.prompt + req.output[:-1])
         self.policy.on_finish(req, req.finished_at)
 
     # ------------------------------------------------- broadcast fork
@@ -628,6 +691,15 @@ class Engine:
             if rp.kind == "decode":
                 chunks.append([r.output[-1] if r.output else r.prompt[-1]])
                 emit.append(True)
+            elif rp.kind == "verify":
+                # speculative row (§16): last sampled token + the drafts;
+                # drafted KV lands at [kv_len, kv_len+k) — positions the
+                # page-aligned radix invariants place in request-OWNED
+                # pages, so a rejected draft is private garbage the next
+                # step overwrites (rollback = nothing to do)
+                last = r.output[-1] if r.output else r.prompt[-1]
+                chunks.append([last] + list(rp.draft))
+                emit.append(True)
             else:
                 chunks.append(r.prompt[rp.start:rp.end])
                 emit.append(rp.end >= len(r.prompt)
@@ -655,35 +727,89 @@ class Engine:
                 tps.append(1.0)
                 seeds.append(0)
                 spos.append(0)
-        n_decode = len(plan.decode_rows)
+        verify_rows = plan.verify_rows
+        n_decode = len(plan.decode_rows) + len(verify_rows)
         if plan.is_mixed:
             self.mixed_steps += 1
         t0 = time.perf_counter()
-        next_toks, _ = self.executor.mixed_step(
-            chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
-            top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
+        if verify_rows:
+            self.spec_steps += 1
+            # verify-only plans pad the q tile to pow2(k+1), not the
+            # 32-wide prefill tile — the verify call must stay close to a
+            # decode call's cost for speculation to pay off
+            qfloor = plan.q_max if not plan.prefill_rows else 0
+            next_toks, _, greedy_all, n_acc = self.executor.mixed_step(
+                chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
+                top_ks=tks, top_ps=tps, seeds=seeds, spos=spos,
+                verify=True, qfloor=qfloor)
+        else:
+            greedy_all = n_acc = None
+            next_toks, _ = self.executor.mixed_step(
+                chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
+                top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
         elapsed = (time.perf_counter() - t0) * 1e3
         # attribute wall clock by token share: a decode-only iteration is
         # pure decode_ms (bench_decode's deltas stay meaningful), a mixed
-        # one splits proportionally
-        dec_frac = n_decode / max(1, plan.total_tokens)
+        # one splits proportionally (verify rows count as decode work)
+        dec_toks = sum(rp.q_len for rp in rows if rp.kind != "prefill")
+        dec_frac = dec_toks / max(1, plan.total_tokens)
         self.decode_ms += elapsed * dec_frac
         self.prefill_ms += elapsed * (1.0 - dec_frac)
-        host_toks = None
+        host_toks = greedy_host = nacc_host = None
         if any(emit):               # ONE blocking D2H per iteration
             t0 = time.perf_counter()
             host_toks = np.asarray(next_toks)
+            if verify_rows:
+                greedy_host = np.asarray(greedy_all)
+                nacc_host = np.asarray(n_acc)
             self.sync_ms += (time.perf_counter() - t0) * 1e3
         if n_decode:
             self._note_decode_batch(n_decode)
+        step_end = time.time()
         for i, rp in enumerate(rows):
             r = rp.req
+            if rp.kind == "verify":
+                # commit the accepted prefix + the bonus correction token
+                # (greedy_all[n_acc] is computed from a fully accepted
+                # input prefix, so it is the true greedy continuation);
+                # one token at a time, mirroring the decode commit so
+                # stop/length semantics stay bit-identical
+                k = rp.q_len - 1
+                n_ok = int(nacc_host[i])
+                committed = [int(t) for t in greedy_host[i, :n_ok + 1]]
+                r.spec_proposed += k
+                r.spec_accepted += n_ok
+                self.spec_proposed += k
+                self.spec_accepted += n_ok
+                self.spec_committed += len(committed)
+                ctl = self._spec_ctl.get(r.rid)
+                if ctl is not None:
+                    ctl.update(k, n_ok)
+                # interpolate per-token stamps across the step's wall
+                # clock (multi-token-safe TPOT/streaming)
+                dt = (elapsed / 1e3) / len(committed)
+                for j, tok in enumerate(committed):
+                    r.kv_len += 1
+                    ts = step_end - dt * (len(committed) - 1 - j)
+                    if r.first_token_at == 0.0:
+                        r.first_token_at = ts
+                    r.output.append(tok)
+                    r.token_times.append(ts)
+                    if tok in r.params.stop_token_ids:
+                        self._finish(r, reason="stop")
+                        break
+                    if len(r.output) >= r.max_new_tokens + 1 or \
+                            r.kv_len + 1 >= self.max_pages_per_req * page:
+                        self._finish(r, reason="length")
+                        break
+                continue
             if rp.kind == "decode":
                 r.kv_len += 1
                 tok = int(host_toks[i])
                 if r.first_token_at == 0.0:
-                    r.first_token_at = time.time()
+                    r.first_token_at = step_end
                 r.output.append(tok)
+                r.token_times.append(step_end)
                 if tok in r.params.stop_token_ids:
                     self._finish(r, reason="stop")
                 elif len(r.output) >= r.max_new_tokens + 1 or \
@@ -704,8 +830,9 @@ class Engine:
             r.state = "decode"
             tok = int(host_toks[i])
             if r.first_token_at == 0.0:
-                r.first_token_at = time.time()
+                r.first_token_at = step_end
             r.output.append(tok)
+            r.token_times.append(step_end)
             if tok in r.params.stop_token_ids:
                 self._finish(r, reason="stop")
         return True
@@ -789,7 +916,8 @@ class Engine:
             # rows + budget-filling prefill chunks — runs as one call
             if self._try_broadcast():
                 progress = True
-            if self._run_mixed(self.scheduler.plan(self.running)):
+            if self._run_mixed(self.scheduler.plan(
+                    self.running, propose=self._propose)):
                 progress = True
         else:
             # legacy phase-separated loop: one batched prefill call
@@ -884,8 +1012,18 @@ class Engine:
         lat = [r for r in self.done
                if not r.is_context and r.first_token_at > 0.0]
         ttfts = sorted((r.first_token_at - r.arrival) * 1e3 for r in lat)
-        tpots = sorted((r.finished_at - r.first_token_at) * 1e3 /
-                       max(1, len(r.output) - 1) for r in lat)
+
+        def _tpot_ms(r):
+            # per-token stamps (interpolated across multi-token verify
+            # commits) give the honest inter-token gap; fall back to the
+            # old span/(n-1) estimate for requests without stamps
+            if len(r.token_times) >= 2:
+                return ((r.token_times[-1] - r.token_times[0]) * 1e3 /
+                        (len(r.token_times) - 1))
+            return ((r.finished_at - r.first_token_at) * 1e3 /
+                    max(1, len(r.output) - 1))
+
+        tpots = sorted(_tpot_ms(r) for r in lat)
 
         def _pct(vals, q):
             if not vals:
@@ -948,4 +1086,15 @@ class Engine:
             # (0 whenever use_paged_kernel=True — regression-gated by the
             # parity matrix, DESIGN.md §13)
             "fallback_gather_calls": self.executor.fallback_gather_calls,
+            # speculative decoding (DESIGN.md §16): proposer throughput,
+            # acceptance, and how many iterations carried verify rows
+            "speculate": self.sc.speculate,
+            "spec_proposer": self.proposer.name,
+            "spec_steps": self.spec_steps,
+            "spec_step_share": self.spec_steps / max(1, self.steps),
+            "spec_proposed_tokens": self.spec_proposed,
+            "spec_accepted_tokens": self.spec_accepted,
+            "spec_committed_tokens": self.spec_committed,
+            "spec_acceptance_rate": (self.spec_accepted /
+                                     max(1, self.spec_proposed)),
         }

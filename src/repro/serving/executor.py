@@ -121,7 +121,7 @@ class PagedExecutor:
                                static_argnames=("sampled",))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(0,),
                                 static_argnames=("chunk", "sampled",
-                                                 "unified"))
+                                                 "unified", "verify"))
 
     # ------------------------------------------------ tiered KV offload
     def export_pages(self, kind: str,
@@ -383,7 +383,8 @@ class PagedExecutor:
     # ------------------------------------------------------------ prefill
     def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_ids,
                     bt_b, bt_r, wpages_b, wpages_r, temps, top_ks, top_ps,
-                    seeds, spos, *, chunk, sampled, unified=False):
+                    seeds, spos, *, chunk, sampled, unified=False,
+                    verify=False):
         """Chunked prefill for a PADDED BATCH of requests.
 
         tokens: (B, chunk) padded; start: (B,) absolute position of each
@@ -402,6 +403,18 @@ class PagedExecutor:
         rows masked to exact zeros.  The non-unified prefill grid instead
         leaves rows past ``n_valid`` as ignored garbage; both take their
         logits at row ``n_valid - 1``, so outputs agree.
+
+        ``verify`` (static, DESIGN.md §16) additionally unembeds EVERY
+        row position and reduces the longest greedy-accepted draft prefix
+        in-jit: verify rows carry ``[t0, d_1..d_k]`` as their tokens, and
+        draft ``d_{j+1}`` is accepted iff it equals the argmax after
+        consuming ``[t0, d_1..d_j]`` AND every earlier draft was
+        (cumprod over the match mask — no per-token host sync).  Returns
+        the extended tuple ``(pools, next_tok, logits, greedy_all,
+        n_acc)``; ``greedy_all[i, :n_acc[i]+1]`` is exactly the token
+        run the engine commits (accepted drafts + the bonus correction
+        token, whose input prefix is fully accepted so it is the true
+        greedy continuation).
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
@@ -479,13 +492,29 @@ class PagedExecutor:
             x = x + tfm.ffn(p_l, h, cfg)
         # per-row logits of the LAST VALID token
         idx = jnp.maximum(n_valid - 1, 0).astype(jnp.int32)
-        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-        logits = tfm.unembed(self.params, x_last, cfg)[:, 0]    # (B, V)
+        if verify:
+            # unembed EVERY position once; the last-valid logits are a
+            # gather from the same tensor (bit-identical to the x_last
+            # path: unembed is a per-position matmul)
+            logits_all = tfm.unembed(self.params, x, cfg)     # (B, chunk, V)
+            greedy_all = jnp.argmax(logits_all, axis=-1).astype(jnp.int32)
+            logits = jnp.take_along_axis(
+                logits_all, idx[:, None, None], axis=1)[:, 0]
+            # longest accepted draft prefix: token column j+1 must match
+            # the greedy prediction at column j, for in-range drafts only
+            ok = (tokens[:, 1:] == greedy_all[:, :-1]) & \
+                (jnp.arange(1, chunk)[None] < n_valid[:, None])
+            n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+        else:
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            logits = tfm.unembed(self.params, x_last, cfg)[:, 0]   # (B, V)
         if sampled:
             next_tok = sample_tokens(logits, temps, top_ks, top_ps, seeds,
                                      spos)
         else:
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if verify:
+            return new_pools, next_tok, logits, greedy_all, n_acc
         return new_pools, next_tok, logits
 
     def prefill_plan(self, n_rows: int):
@@ -568,7 +597,8 @@ class PagedExecutor:
     # ------------------------------------------------------- mixed batch
     def mixed_step(self, chunks, starts, adapter_ids, base_tables,
                    res_tables, wpages_b, wpages_r, temps=None, top_ks=None,
-                   top_ps=None, seeds=None, spos=None):
+                   top_ps=None, seeds=None, spos=None, verify=False,
+                   qfloor=0):
         """One iteration-level mixed batch (DESIGN.md §14): decode rows
         (``chunks[i] == [last_token]``, ``starts[i] == kv_len``) and
         chunked-prefill rows side by side, executed as a SINGLE call.
@@ -581,10 +611,18 @@ class PagedExecutor:
         LONGEST row and run the unified kernel grid, each row's real
         length riding in as its q-length.  Returns DEVICE arrays
         ``(next_tok, logits)``; rows past ``len(chunks)`` are padding.
+
+        ``verify=True`` (DESIGN.md §16): the plan carries speculative
+        verify rows (``chunks[i] == [t0, d_1..d_k]``); returns the
+        extended tuple ``(next_tok, logits, greedy_all, n_acc)`` with the
+        per-position greedy tokens and accepted-prefix lengths.
+        ``qfloor`` overrides the q-tile floor — verify-dominated plans
+        with no prefill rows pad to pow2(k+1) instead of the 32-wide
+        prefill tile, so a k=4 verify step is not 8x padding waste.
         """
         bsz = len(chunks)
         qmax = max(len(c) for c in chunks)
-        if qmax == 1 and bsz <= self.sc.max_batch:
+        if not verify and qmax == 1 and bsz <= self.sc.max_batch:
             # decode-shaped plan: write position == starts, attend over
             # starts+1 tokens — exactly the decode contract
             return self.decode(
@@ -603,7 +641,9 @@ class PagedExecutor:
         # or two stable buckets; pad rows/columns carry q_len 0 (or sit
         # past a row's q_len) and are skipped by the kernels' live/mask
         # conditions.
-        qpad = _pow2(max(qmax, min(self.sc.max_prefill_tokens, 32)))
+        qfloor = qfloor if qfloor > 0 else min(self.sc.max_prefill_tokens,
+                                               32)
+        qpad = _pow2(max(qmax, qfloor))
         bpad = _pow2(max(bsz, min(self.sc.max_batch, 4)))
         temps = list(temps) if temps is not None else [0.0] * bsz
         top_ks = list(top_ks) if top_ks is not None else [0] * bsz
@@ -645,7 +685,7 @@ class PagedExecutor:
         top_ps += [1.0] * pad
         seeds += [0] * pad
         spos += [0] * pad
-        self.pools, next_tok, logits = self._prefill(
+        out = self._prefill(
             self.pools, jnp.asarray(toks, jnp.int32),
             jnp.asarray(starts, jnp.int32), jnp.asarray(nvalid, jnp.int32),
             jnp.asarray(adapter_ids, jnp.int32),
@@ -654,8 +694,10 @@ class PagedExecutor:
             jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
             jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
             jnp.asarray(spos, jnp.int32),
-            chunk=qpad, sampled=any(t > 0 for t in temps), unified=True)
-        return next_tok, logits
+            chunk=qpad, sampled=any(t > 0 for t in temps), unified=True,
+            verify=verify)
+        self.pools = out[0]
+        return tuple(out[1:])
 
     # ------------------------------------------------- broadcast fork
     def _prefill_broadcast_fn(self, pools: Pools, tokens, start, n_valid,

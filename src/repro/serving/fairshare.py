@@ -194,6 +194,15 @@ class AdmissionPolicy:
         st.concurrent = max(0, st.concurrent - 1)
         st.tokens_in_flight = max(
             0, st.tokens_in_flight - (len(req.prompt) + req.max_new_tokens))
+        # settle decode billing against tokens ACTUALLY generated: admission
+        # charged the full max_new budget up front; a stop-token finish (or
+        # a speculative run whose rejected drafts were never committed)
+        # generated fewer.  Proposed-but-rejected draft tokens are never
+        # billed — only the committed stream counts as service.
+        out = getattr(req, "output", None)
+        if out is not None:
+            gen = max(0, len(out) - 1)
+            st.service += gen - req.max_new_tokens
 
     def on_reject(self, req, now: float, timeout: bool = False) -> None:
         """A WAITING request was refused (shed / impossible / deadline)."""

@@ -76,13 +76,16 @@ __all__ = ["HttpFrontend", "ForkClient"]
 
 
 def _sampling_from(body: Dict) -> SamplingParams:
+    spec = body.get("speculate")          # absent/None = engine default
     return SamplingParams(
         temperature=float(body.get("temperature", 0.0)),
         top_k=int(body.get("top_k", 0)),
         top_p=float(body.get("top_p", 1.0)),
         seed=int(body.get("seed", 0)),
         max_new_tokens=int(body.get("max_new_tokens", 16)),
-        stop_token_ids=tuple(body.get("stop_token_ids", ())))
+        stop_token_ids=tuple(body.get("stop_token_ids", ())),
+        speculate=None if spec is None else bool(spec),
+        spec_k=int(body.get("spec_k", 0)))
 
 
 def _status_for(finish_reason: str, retry_after_s: float) -> int:
@@ -197,7 +200,8 @@ class HttpFrontend:
                 ev = st.handle._queue.popleft()
                 payload = {"rid": ev.rid, "index": ev.index,
                            "token": ev.token, "finished": ev.finished,
-                           "finish_reason": ev.finish_reason}
+                           "finish_reason": ev.finish_reason,
+                           "ts": ev.ts}
                 st.loop.call_soon_threadsafe(st.aq.put_nowait, payload)
                 if ev.finished:
                     done.append(rid)
@@ -428,7 +432,8 @@ class HttpFrontend:
                 return
             writer.write(b"data: " +
                          json.dumps({"token": ev["token"],
-                                     "index": ev["index"]}).encode() +
+                                     "index": ev["index"],
+                                     "ts": ev.get("ts", 0.0)}).encode() +
                          b"\n\n")
             await writer.drain()
             ev = await aq.get()

@@ -22,7 +22,7 @@ and sampled requests in a batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,11 @@ class SamplingParams:
     max_new_tokens  generation budget
     stop_token_ids  generation finishes (reason "stop") when one of these
                  is produced; the stop token itself is not returned
+    speculate    per-request speculative-decoding override (DESIGN.md
+                 §16): None defers to ``ServeConfig.speculate``; True/
+                 False forces it on/off for this request.  Greedy
+                 requests only — sampled rows always run plain decode.
+    spec_k       per-request draft-length cap (0 = ``ServeConfig.spec_k``)
     """
 
     temperature: float = 0.0
@@ -49,6 +54,8 @@ class SamplingParams:
     seed: int = 0
     max_new_tokens: int = 16
     stop_token_ids: Tuple[int, ...] = ()
+    speculate: Optional[bool] = None
+    spec_k: int = 0
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -60,6 +67,8 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
         if self.max_new_tokens < 0:
             raise ValueError("max_new_tokens must be >= 0")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
         # tolerate lists from CLI / JSON callers
         object.__setattr__(self, "stop_token_ids",
                            tuple(self.stop_token_ids))

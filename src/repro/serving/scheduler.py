@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 from repro.core.config import ServeConfig
 
@@ -44,16 +44,21 @@ class RowPlan:
 
     ``kind == "decode"`` rows consume the request's last sampled token
     (q_len == 1, start == kv_len); ``kind == "prefill"`` rows compute the
-    prompt slice ``[start, start + q_len)``.  Both are the same operation
-    to the unified grid — write q_len tokens' KV at ``start`` and attend
-    causally over ``start + q_len`` tokens — which is exactly why one
-    kernel launch can serve the whole plan.
+    prompt slice ``[start, start + q_len)``; ``kind == "verify"`` rows
+    are speculative decode rows (DESIGN.md §16) carrying the last sampled
+    token plus ``draft`` guessed continuations (q_len == 1 + len(draft),
+    start == kv_len) — the engine commits the accepted prefix and drops
+    the rest via CoW.  All three are the same operation to the unified
+    grid — write q_len tokens' KV at ``start`` and attend causally over
+    ``start + q_len`` tokens — which is exactly why one kernel launch can
+    serve the whole plan.
     """
 
     req: Any                    # serving.engine.Request (untyped: no cycle)
     q_len: int
     start: int
-    kind: str                   # "decode" | "prefill"
+    kind: str                   # "decode" | "prefill" | "verify"
+    draft: Tuple[int, ...] = ()  # speculated tokens (verify rows only)
 
     @property
     def end(self) -> int:
@@ -72,6 +77,10 @@ class BatchPlan:
         return [r for r in self.rows if r.kind == "decode"]
 
     @property
+    def verify_rows(self) -> List[RowPlan]:
+        return [r for r in self.rows if r.kind == "verify"]
+
+    @property
     def prefill_rows(self) -> List[RowPlan]:
         return [r for r in self.rows if r.kind == "prefill"]
 
@@ -85,9 +94,10 @@ class BatchPlan:
 
     @property
     def is_mixed(self) -> bool:
-        """True when decode AND prefill rows share this iteration — the
-        overlap case the unified grid exists for."""
-        return bool(self.decode_rows) and bool(self.prefill_rows)
+        """True when decode(/verify) AND prefill rows share this
+        iteration — the overlap case the unified grid exists for."""
+        return bool(self.decode_rows or self.verify_rows) \
+            and bool(self.prefill_rows)
 
 
 class IterationScheduler:
@@ -118,9 +128,19 @@ class IterationScheduler:
         return self.sc.max_prefill_tokens + self.sc.max_batch
 
     def plan(self, running: Sequence[Any],
-             now: Optional[float] = None) -> BatchPlan:
+             now: Optional[float] = None,
+             propose: Optional[Callable[[Any], Sequence[int]]] = None
+             ) -> BatchPlan:
         """Pack one iteration from the ``running`` list.  Does not mutate
-        request state beyond stamping ``first_scheduled_at``."""
+        request state beyond stamping ``first_scheduled_at``.
+
+        ``propose`` (DESIGN.md §16) is the engine's speculation hook: per
+        decode-ready request it returns up to k drafted tokens (empty =
+        no speculation).  A non-empty draft turns the decode row into a
+        ``verify`` row with q_len = 1 + len(draft); drafts are trimmed to
+        the remaining token budget but the base decode token is never
+        dropped — decode stays unstarvable under budget pressure.
+        """
         budget = self.budget
         rows: List[RowPlan] = []
         used = 0
@@ -130,8 +150,15 @@ class IterationScheduler:
                 break
             if r.state == "decode" and \
                     len(r.output) < r.max_new_tokens + 1:
-                rows.append(RowPlan(r, 1, r.kv_len, "decode"))
-                used += 1
+                draft: Tuple[int, ...] = ()
+                if propose is not None:
+                    draft = tuple(propose(r))[:max(0, budget - used - 1)]
+                if draft:
+                    rows.append(RowPlan(r, 1 + len(draft), r.kv_len,
+                                        "verify", draft))
+                else:
+                    rows.append(RowPlan(r, 1, r.kv_len, "decode"))
+                used += 1 + len(draft)
         # 2. chunked prefill fills what budget remains
         cap = self.sc.max_prefill_batch or len(running)
         n_prefill = 0

@@ -4,6 +4,7 @@ One parametrized greedy token-parity suite over
 
     {forkkv, prefix, full_reuse} x {paged, gather} x {dense, GQA, MQA, SWA}
                                  x {mixed, phase-separated}
+                                 x {speculative, plain}
 
 through the public ``ForkServer`` API, replacing the ad-hoc per-PR parity
 tests (PR 2's forkkv-vs-prefix check, PR 3's paged-vs-gather check): for
@@ -21,6 +22,11 @@ kernel grid) must produce the same greedy tokens as the legacy
 phase-separated step loop, and the workload staggers its forks so at
 least one iteration REALLY mixes decode and prefill rows
 (``mixed_steps >= 1`` — without the stagger the parity would be vacuous).
+
+The ``speculative`` axis (DESIGN.md §16) gates draft-free speculative
+decoding the same way: speculation ON must be token-identical to OFF
+while really proposing AND accepting drafts, and rejected-draft rollback
+must leak zero KV pages (after eviction both pools return to baseline).
 
 Backends: the suite runs under whichever kernel backend
 ``FORKKV_KERNEL_BACKEND`` / ``REPRO_ATTN_BACKEND`` selects (CI runs it
@@ -70,35 +76,59 @@ def models():
     return get
 
 
-def run_workload(model, mode: str, paged: bool, mixed: bool = True):
+def run_workload(model, mode: str, paged: bool, mixed: bool = True,
+                 speculate: bool = False):
     """The shared workload: one pinned session context, two CoW forks
-    under different adapters, greedy decode.  Deterministic in everything
-    but the (mode, paged, mixed, arch) cell under test.
+    under different adapters plus a third replaying the first, greedy
+    decode.  Deterministic in everything but the
+    (mode, paged, mixed, speculate, arch) cell under test.
 
     The forks are STAGGERED — the second is submitted only after a few
     polls, while the first is mid-decode — so the iteration scheduler
     must overlap one request's decode rows with the other's prefill
     chunks in the same plan (the mixed-grid case the §14 refactor
     exists for; legacy phase separation serves the exact same schedule
-    through its two per-step calls)."""
+    through its two per-step calls).
+
+    The instructions are PREFIXES of the context (agent traces re-quote
+    their context), so the prompt-lookup proposer always has material,
+    and the third fork repeats fork 1 verbatim so the ngram cache —
+    warmed when fork 1 finished — replays its output (§16: speculation
+    parity would be vacuous if nothing were ever accepted).  After the
+    session closes the caches are fully evicted and both pools' free
+    counts are recorded, so the speculation gate can assert zero leaked
+    pages from rejected-draft rollback."""
     cfg, params, lora = model
     sc = ServeConfig(page_size=PAGE, max_pages=96, max_batch=4,
                      max_prefill_tokens=48, max_pages_per_req=8,
                      mode=mode, use_paged_kernel=paged,
-                     mixed_batching=mixed)
+                     mixed_batching=mixed, speculate=speculate,
+                     spec_k=3, spec_proposer="ngram_cache")
     server = ForkServer(cfg, params, lora, sc)
     rng = np.random.default_rng(7)
     ctx = list(rng.integers(0, cfg.vocab_size, 40))
     with server.session(ctx, adapter_id=0) as sess:
-        handles = [sess.fork(1, list(rng.integers(0, cfg.vocab_size, 5)),
-                             SamplingParams(max_new_tokens=5))]
+        handles = [sess.fork(1, ctx[:5], SamplingParams(max_new_tokens=5))]
         for _ in range(3):       # first fork reaches decode...
             server.poll()
         handles.append(
-            sess.fork(2, list(rng.integers(0, cfg.vocab_size, 6)),
-                      SamplingParams(max_new_tokens=5)))
+            sess.fork(2, ctx[:6], SamplingParams(max_new_tokens=5)))
         outs = [o.tokens for o in server.wait(handles)]
-    return outs, server.metrics()
+        # replay fork 1: the ngram cache was warmed by its finish, so the
+        # speculate cell gets high-acceptance verify rows here
+        replay = [sess.fork(1, ctx[:5], SamplingParams(max_new_tokens=5))]
+        outs += [o.tokens for o in server.wait(replay)]
+    m = server.metrics()
+    # drain every cache and record the pools' final free counts (leak gate)
+    eng = server.engine
+    eng._evict(eng.base_pool, eng.base_pool.num_pages)
+    if mode == "forkkv":
+        eng._evict(eng.res_pool, eng.res_pool.num_pages)
+    m["drained_free_base"] = eng.base_pool.free_pages
+    m["total_base"] = eng.base_pool.num_pages
+    m["drained_free_res"] = eng.res_pool.free_pages
+    m["total_res"] = eng.res_pool.num_pages
+    return outs, m
 
 
 # each (arch, mode, paged, mixed) cell is deterministic, and several test
@@ -107,10 +137,12 @@ def run_workload(model, mode: str, paged: bool, mixed: bool = True):
 _CELLS = {}
 
 
-def cell(models, arch: str, mode: str, paged: bool, mixed: bool):
-    key = (arch, mode, paged, mixed)
+def cell(models, arch: str, mode: str, paged: bool, mixed: bool,
+         speculate: bool = False):
+    key = (arch, mode, paged, mixed, speculate)
     if key not in _CELLS:
-        _CELLS[key] = run_workload(models(arch), mode, paged, mixed)
+        _CELLS[key] = run_workload(models(arch), mode, paged, mixed,
+                                   speculate)
     return _CELLS[key]
 
 
@@ -161,3 +193,36 @@ def test_mixed_vs_phase_separated_token_parity(models, mode, arch):
     assert legacy_m["mixed_batching"] is False
     assert legacy_m["mixed_steps"] == 0
     assert legacy_m["fallback_gather_calls"] == 0
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+@pytest.mark.parametrize("mode", MODES)
+def test_speculative_vs_plain_token_parity(models, mode, arch):
+    """The §16 gate: draft-free speculative decoding must generate the
+    same greedy tokens as plain decode — same staggered workload, only
+    ``ServeConfig.speculate`` flipped — while REALLY speculating
+    (proposals made AND accepted), without a single gather fallback,
+    and without leaking one KV page: after the session closes and the
+    caches are fully evicted, both pools return to baseline (only the
+    executor's dump page remains allocated), proving rejected-draft
+    rollback is pure refcounting."""
+    spec_out, spec_m = cell(models, arch, mode, paged=True, mixed=True,
+                            speculate=True)
+    plain_out, plain_m = cell(models, arch, mode, paged=True, mixed=True,
+                              speculate=False)
+    assert all(len(t) == 5 for t in spec_out)
+    assert spec_out == plain_out
+
+    # the speculation is real, not vacuous: drafts were proposed and the
+    # fork-1 replay (ngram-cache warmed) got some accepted
+    assert spec_m["speculate"] is True
+    assert spec_m["spec_steps"] >= 1
+    assert spec_m["spec_proposed_tokens"] > 0
+    assert spec_m["spec_accepted_tokens"] > 0
+    assert plain_m["spec_steps"] == 0
+    # still fully page-native
+    assert spec_m["fallback_gather_calls"] == 0
+    # zero-leak rollback: everything evictable was freed; only the dump
+    # page stays (allocated once at engine construction, held forever)
+    assert spec_m["drained_free_base"] == spec_m["total_base"] - 1
+    assert spec_m["drained_free_res"] == spec_m["total_res"] - 1

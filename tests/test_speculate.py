@@ -1,0 +1,248 @@
+"""Speculative decoding tests (DESIGN.md §16).
+
+Proposer units (pure host-side, no model), the accept-rule reference,
+adaptive-k backoff, and engine integration: token parity against plain
+decode under an all-rejecting proposer, full acceptance (fewer engine
+steps) under an oracle proposer, k=0 degeneration, stall detection with
+speculation enabled, and fair-share billing of ACCEPTED — never merely
+proposed — tokens.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.api import ForkServer, SamplingParams
+from repro.serving.speculate import (AdaptiveK, NGramCacheProposer,
+                                     PromptLookupProposer, Proposer,
+                                     longest_accepted_prefix,
+                                     make_proposer)
+
+
+# ------------------------------------------------------------- proposers
+def test_prompt_lookup_matches_most_recent_longest_ngram():
+    p = PromptLookupProposer(max_ngram=3, min_ngram=2)
+    # suffix (7, 8) occurred earlier, followed by 9, 1
+    toks = [1, 7, 8, 9, 1, 5, 7, 8]
+    assert p.propose(toks, 2) == [9, 1]
+    # longest n wins: suffix (7, 8, 9) matches over the 2-gram site
+    toks = [7, 8, 9, 4, 2, 7, 8, 9]
+    assert p.propose(toks, 1) == [4]
+
+
+def test_prompt_lookup_no_match_and_k0():
+    p = PromptLookupProposer()
+    assert p.propose([1, 2, 3, 4, 5], 4) == []     # no repeated n-gram
+    assert p.propose([1, 2, 1, 2], 0) == []        # k=0 -> no proposal
+    assert p.propose([1], 4) == []                 # too short
+
+
+def test_ngram_cache_replays_observed_sequence():
+    p = NGramCacheProposer(max_ngram=3, min_ngram=2, cont_len=8)
+    seq = [10, 11, 12, 13, 14, 15, 16]
+    p.observe(seq)
+    # a fresh request reaching ...11, 12 continues as the observed one
+    assert p.propose([40, 41, 11, 12], 3) == [13, 14, 15]
+    assert p.stats()["hits"] == 1
+
+
+def test_ngram_cache_bounded_memory_lru():
+    p = NGramCacheProposer(max_ngram=2, min_ngram=2, max_entries=8)
+    for i in range(100):
+        p.observe([i, i + 1, i + 2])
+    assert len(p) <= 8
+    # oldest entries evicted, newest retained
+    assert p.propose([99, 100], 1) == [101]
+    assert p.propose([0, 1], 1) != [2]
+
+
+def test_ngram_cache_falls_back_to_prompt_lookup():
+    p = NGramCacheProposer(max_ngram=3, min_ngram=2)
+    # cold cache, but the request's own tokens self-match
+    assert p.propose([5, 6, 7, 1, 5, 6], 1) == [7]
+    assert p.stats()["misses"] == 1
+
+
+def test_make_proposer_dispatch():
+    assert make_proposer(ServeConfig()).name == "prompt_lookup"
+    assert make_proposer(
+        ServeConfig(spec_proposer="ngram_cache")).name == "ngram_cache"
+    with pytest.raises(ValueError):
+        make_proposer(ServeConfig(spec_proposer="oracle"))
+
+
+# ------------------------------------------------------- accept rule
+def test_longest_accepted_prefix():
+    assert longest_accepted_prefix([], []) == 0
+    assert longest_accepted_prefix([1, 2, 3], [1, 2, 3]) == 3
+    assert longest_accepted_prefix([1, 2, 3], [1, 9, 3]) == 1
+    assert longest_accepted_prefix([9, 2], [1, 2]) == 0   # all rejected
+
+
+# ------------------------------------------------------- adaptive k
+def test_adaptive_k_backs_off_and_recovers():
+    ctl = AdaptiveK(k_max=8)
+    assert ctl.k == 8                         # optimistic start
+    for _ in range(6):                        # garbage proposer
+        ctl.update(8, 0)
+    assert ctl.k == 1, "sustained rejection must converge to k_min"
+    for _ in range(12):                       # replayed trace
+        ctl.update(ctl.k, ctl.k)
+    assert ctl.k == 8, "sustained acceptance must recover to k_max"
+
+
+def test_adaptive_k_ignores_empty_steps():
+    ctl = AdaptiveK(k_max=4)
+    ctl.update(0, 0)                          # no proposal this step
+    assert ctl.k == 4 and ctl.ema == 1.0
+
+
+# -------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=8)
+    return cfg, params, lora
+
+
+def make_server(model, **kw):
+    cfg, params, lora = model
+    base = dict(page_size=16, max_pages=128, max_batch=4,
+                max_prefill_tokens=64, mode="forkkv",
+                max_pages_per_req=12)
+    base.update(kw)
+    return ForkServer(cfg, params, lora, ServeConfig(**base)), cfg
+
+
+def prompt_tokens(cfg, n, seed=0):
+    return list(np.random.default_rng(seed).integers(0, cfg.vocab_size, n))
+
+
+class _StubProposer(Proposer):
+    """Deterministic draft source for integration tests."""
+
+    name = "stub"
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def propose(self, tokens, k):
+        return list(self._fn(list(tokens), k))
+
+
+def _run(model, proposer_fn=None, speculate=True, **kw):
+    server, cfg = make_server(model, speculate=speculate, spec_k=4,
+                              spec_adaptive=False, **kw)
+    if proposer_fn is not None:
+        server.engine.proposer = _StubProposer(proposer_fn)
+    prompt = prompt_tokens(cfg, 40, seed=3)
+    out = server.generate(1, prompt,
+                          SamplingParams(max_new_tokens=10)).result()
+    return out, server
+
+
+def test_all_rejected_drafts_keep_token_parity(model):
+    """A proposer feeding pure garbage must cost steps, never tokens:
+    the committed stream equals plain decode bit-for-bit and every
+    rejected draft's KV is dropped via CoW (no gather fallbacks)."""
+    base, _ = _run(model, speculate=False)
+    spec, server = _run(model, proposer_fn=lambda t, k: [0] * k)
+    assert spec.tokens == base.tokens
+    m = server.metrics()
+    assert m["spec_proposed_tokens"] > 0
+    assert m["spec_accepted_tokens"] == 0
+    assert m["fallback_gather_calls"] == 0
+    # the bonus token still commits: a verify step is never slower than
+    # a decode step in tokens
+    assert spec.metrics["spec_proposed"] > 0
+    assert spec.metrics["spec_accepted"] == 0
+
+
+def test_oracle_proposer_accepts_everything_in_fewer_steps(model):
+    """An oracle that proposes the true continuation gets every draft
+    accepted and finishes in fewer engine steps than plain decode."""
+    base, base_srv = _run(model, speculate=False)
+    seq_prompt = prompt_tokens(model[0], 40, seed=3)
+    full = seq_prompt + base.tokens
+
+    def oracle(tokens, k):
+        pos = len(tokens)
+        return full[pos:pos + k]
+
+    spec, server = _run(model, proposer_fn=oracle)
+    assert spec.tokens == base.tokens
+    m = server.metrics()
+    assert m["spec_accepted_tokens"] == m["spec_proposed_tokens"] > 0
+    assert m["spec_acceptance_rate"] == 1.0
+    assert server.engine.steps < base_srv.engine.steps, \
+        "full acceptance must compress the step count"
+
+
+def test_k0_and_per_request_opt_out_degenerate_to_plain_decode(model):
+    """spec_k clamped to zero budget and per-request speculate=False both
+    produce plain decode rows — zero verify steps."""
+    server, cfg = make_server(model, speculate=True, spec_k=4)
+    prompt = prompt_tokens(cfg, 40, seed=5)
+    out = server.generate(
+        1, prompt, SamplingParams(max_new_tokens=6,
+                                  speculate=False)).result()
+    assert len(out.tokens) == 6
+    assert server.metrics()["spec_steps"] == 0
+    # sampled requests never speculate either (greedy-only rule)
+    out2 = server.generate(
+        1, prompt, SamplingParams(max_new_tokens=6, temperature=0.7,
+                                  seed=9)).result()
+    assert len(out2.tokens) == 6
+    assert server.metrics()["spec_steps"] == 0
+
+
+def test_per_request_opt_in_with_engine_default_off(model):
+    server, cfg = make_server(model, speculate=False,
+                              spec_proposer="ngram_cache")
+    prompt = prompt_tokens(cfg, 40, seed=6)
+    # warm: first request observed at finish; replay opts in per-request
+    server.generate(1, prompt, SamplingParams(max_new_tokens=8)).result()
+    out = server.generate(
+        1, prompt, SamplingParams(max_new_tokens=8,
+                                  speculate=True)).result()
+    m = server.metrics()
+    assert m["spec_steps"] > 0 and m["spec_accepted_tokens"] > 0
+    assert len(out.tokens) == 8
+
+
+def test_stall_detection_still_fires_with_speculation(model):
+    """Speculation must not mask the no-progress stall detector: an
+    impossible-to-admit request still fails loudly."""
+    server, cfg = make_server(model, max_pages=12, stall_limit=8,
+                              speculate=True)
+    sess = server.session(prompt_tokens(cfg, 96, seed=6))  # pins 6 pages
+    # disjoint prompt needing more pages than can ever be freed
+    h = server.generate(1, prompt_tokens(cfg, 120, seed=7),
+                        SamplingParams(max_new_tokens=4))
+    out = h.result()
+    assert out.finish_reason == "stalled"
+    assert server.metrics()["stalled"] == 1
+    sess.close()
+
+
+def test_fairshare_bills_accepted_not_proposed_tokens(model):
+    """Admission billing settles to the tokens actually generated:
+    rejected drafts are never service, and a stop-token finish refunds
+    the unused decode budget (speculation on or off)."""
+    server, cfg = make_server(model, admission="fairshare",
+                              speculate=True, spec_adaptive=False,
+                              spec_k=4)
+    server.engine.proposer = _StubProposer(lambda t, k: [0] * k)
+    prompt = prompt_tokens(cfg, 32, seed=7)
+    server.generate(1, prompt, SamplingParams(max_new_tokens=8),
+                    tenant="a").result()
+    st = server.engine.policy.tenant("a")
+    m = server.metrics()
+    assert m["spec_proposed_tokens"] > 0
+    # service = prompt cost + tokens generated; the proposed-but-rejected
+    # drafts (spec_proposed) must NOT appear
+    assert st.service == pytest.approx(len(prompt) + 8)
+    assert st.service < len(prompt) + 8 + m["spec_proposed_tokens"]
