@@ -35,8 +35,12 @@ ap.add_argument("--connect", action="store_true",
 ap.add_argument("--agents", type=int, default=3)
 args = ap.parse_args()
 
+# retry on transient 429/503 (overload shed, draining replica) with
+# jittered exponential backoff honoring the server's Retry-After hint
+retry_kw = dict(max_retries=3, backoff_s=0.25, backoff_cap_s=4.0)
+
 if args.connect:
-    client = ForkClient(host=args.host, port=args.port)
+    client = ForkClient(host=args.host, port=args.port, **retry_kw)
     fe = None
 else:
     from repro.launch.serve import build_server
@@ -45,7 +49,7 @@ else:
                              admission="fairshare")
     fe = HttpFrontend(server, host=args.host,
                       port=args.port).start_background()
-    client = ForkClient(host=args.host, port=fe.port)
+    client = ForkClient(host=args.host, port=fe.port, **retry_kw)
     print(f"in-process server on http://{args.host}:{fe.port}")
 
 rng = np.random.default_rng(0)
@@ -70,7 +74,7 @@ for i in range(1, args.agents):
     doc = client.fork(sid, instruction, adapter_id=1 + i,
                       max_new_tokens=12)
     print(f"agent {i} (adapter {1 + i}): {doc['tokens']} "
-          f"[{doc['finish_reason']}]")
+          f"[{doc['finish_reason']}] retries={doc['client_retries']}")
 
 m = client.metrics()
 print(f"\nhit_rate={m['hit_rate']:.2f} hit_kinds={m.get('hit_kinds')} "

@@ -155,5 +155,43 @@ print("http smoke OK: spec-on parity", len(runs[0]), "tokens,",
       "acceptance:", round(m["spec_acceptance_rate"], 3),
       "tenants:", list(m["tenants"]))
 PY
-kill $HTTP_PID
+echo "== graceful drain (SIGTERM mid-stream, DESIGN.md §17) =="
+HTTP_PORT="$HTTP_PORT" HTTP_PID="$HTTP_PID" python - <<'PY'
+import os
+import signal
+import time
+
+import numpy as np
+
+from repro.serving.frontend import ForkClient, HttpError
+
+client = ForkClient(port=int(os.environ["HTTP_PORT"]))
+rng = np.random.default_rng(1)
+prompt = [int(t) for t in rng.integers(0, 1000, 48)]
+
+# one stream in flight, then SIGTERM: the stream must run to completion
+# while new work is refused with 503 + finish_reason="draining".  The
+# generation is long so the drain window is comfortably open when the
+# refusal probe lands (a short stream drains in milliseconds and the
+# server exits before the probe connects).
+stream = client.stream_completion(prompt, max_new_tokens=128)
+first = next(stream)
+os.kill(int(os.environ["HTTP_PID"]), signal.SIGTERM)
+time.sleep(0.1)
+try:
+    client.completion(prompt[:32], max_new_tokens=2)
+    raise SystemExit("new request admitted during drain")
+except HttpError as exc:
+    assert exc.status == 503, exc.status
+    assert exc.doc.get("finish_reason") == "draining", exc.doc
+    assert float(exc.headers.get("retry-after", 0)) >= 1.0
+events = [first] + list(stream)
+assert events[-1]["finished"] and len(events[-1]["tokens"]) == 128, events[-1]
+print("drain OK: in-flight stream finished, new requests 503")
+PY
+DRAIN_RC=0
+wait $HTTP_PID || DRAIN_RC=$?
+test "$DRAIN_RC" -eq 0 || {
+  echo "drained server exited rc=$DRAIN_RC"; cat /tmp/forkkv_http.log; exit 1; }
+trap - EXIT
 echo "smoke OK"

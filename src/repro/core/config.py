@@ -309,3 +309,30 @@ class ServeConfig:
     spec_adaptive: bool = True
     spec_min_ngram: int = 2          # shortest suffix n-gram matched
     spec_cache_entries: int = 8192   # ngram_cache bound (LRU-evicted)
+    # ---- fault tolerance (DESIGN.md §17) -----------------------------------
+    # preempt–restore under pool pressure: when admission has been blocked
+    # on pages for ``preempt_after_steps`` consecutive steps, the policy
+    # picks a victim among running requests (worst fair-share score; never
+    # a broadcast-fork writer), checkpoints its computed KV into the radix
+    # tree (demotable to the host tier, or recomputed if that's full too)
+    # and requeues it; on re-admission match_prefix restores the prefix and
+    # only the uncovered suffix re-prefills.
+    preempt: bool = True
+    preempt_after_steps: int = 4
+    # request quarantine: an in-jit isfinite guard on final logits rides
+    # the existing single host sync; poisoned rows finish with
+    # ``finish_reason="error"`` and their pages are reclaimed while the
+    # rest of the batch continues.
+    quarantine: bool = True
+    # deterministic fault injection (serving/faults.py): plan grammar
+    # "site:trigger,trigger;site2:trigger" with sites pool_alloc /
+    # tier_demote / tier_promote / nan_logits / pump_stall / executor and
+    # triggers cN (Nth call), rKEY (key match), pX (seeded probability),
+    # * (always).  Empty string = no injection (env FORKKV_FAULT_PLAN /
+    # FORKKV_FAULT_SEED are the fallback wiring for smoke/CI).
+    fault_plan: str = ""
+    fault_seed: int = 0
+    # pump watchdog: the frontend trips (and counts) when the engine has
+    # pending work but its step loop hasn't advanced for this many
+    # seconds; 0 disables the watchdog thread.
+    watchdog_s: float = 10.0

@@ -38,7 +38,12 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  max_queue_wait_s: float = 0.0,
                  speculate: bool = False,
                  spec_k: int = 4,
-                 spec_proposer: str = "prompt_lookup"):
+                 spec_proposer: str = "prompt_lookup",
+                 preempt: bool = True,
+                 preempt_after_steps: int = 4,
+                 fault_plan: str = "",
+                 fault_seed: int = 0,
+                 watchdog_s: float = 10.0):
     cfg = tiny_serving_model(rank=rank)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
@@ -59,7 +64,11 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      max_queue_depth=max_queue_depth,
                      max_queue_wait_s=max_queue_wait_s,
                      speculate=speculate, spec_k=spec_k,
-                     spec_proposer=spec_proposer)
+                     spec_proposer=spec_proposer,
+                     preempt=preempt,
+                     preempt_after_steps=preempt_after_steps,
+                     fault_plan=fault_plan, fault_seed=fault_seed,
+                     watchdog_s=watchdog_s)
     return ForkServer(cfg, params, lora, sc), cfg
 
 
@@ -146,6 +155,19 @@ def main() -> None:
                     choices=["prompt_lookup", "ngram_cache"],
                     help="draft proposer: prompt self-match or the "
                          "completed-request n-gram cache")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable preempt-restore under pool pressure "
+                         "(DESIGN.md §17); blocked admission then waits "
+                         "for natural completions only")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault-injection plan, e.g. "
+                         "'pool_alloc:c3;nan_logits:p0.1' (DESIGN.md §17; "
+                         "FORKKV_FAULT_PLAN env is the fallback)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for probabilistic fault triggers")
+    ap.add_argument("--watchdog-s", type=float, default=10.0,
+                    help="stuck-pump watchdog threshold in seconds for "
+                         "--http (0 = disabled)")
     ap.add_argument("--stats", action="store_true",
                     help="print step-phase wall-clock totals "
                          "(prefill/decode/sync ms), compiled decode "
@@ -172,8 +194,13 @@ def main() -> None:
         max_queue_depth=args.max_queue_depth,
         max_queue_wait_s=args.max_queue_wait_s,
         speculate=args.speculate, spec_k=args.spec_k,
-        spec_proposer=args.proposer)
+        spec_proposer=args.proposer,
+        preempt=not args.no_preempt,
+        fault_plan=args.fault_plan, fault_seed=args.fault_seed,
+        watchdog_s=args.watchdog_s)
     if args.http:
+        import signal
+
         from repro.serving.frontend import HttpFrontend
         # start_background so the bound port (possibly ephemeral) can be
         # printed for callers that parse it (scripts/smoke.sh)
@@ -181,10 +208,28 @@ def main() -> None:
                           port=args.port).start_background()
         print(f"serving mode={args.mode} admission={args.admission} "
               f"on http://{args.host}:{fe.port}", flush=True)
+
+        # graceful drain (DESIGN.md §17): SIGTERM stops admission (new
+        # requests get 503 + Retry-After), in-flight requests finish,
+        # then the process exits 0.  begin_drain is signal-safe (flag
+        # flip + queue.put); the wait happens back on the main thread.
+        def _on_term(signum, frame):
+            print("drain: signal received, finishing in-flight "
+                  "requests", flush=True)
+            fe.begin_drain()
+
+        signal.signal(signal.SIGTERM, _on_term)
         try:
-            fe._thread.join()
+            while fe._thread.is_alive():
+                fe._thread.join(timeout=0.2)
+                if fe.drained:
+                    print("drain: complete, exiting", flush=True)
+                    break
         except KeyboardInterrupt:
-            fe.shutdown()
+            fe.begin_drain()
+            while not fe.drained and fe._thread.is_alive():
+                fe._thread.join(timeout=0.2)
+        fe.shutdown()
         return
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
@@ -247,6 +292,14 @@ def main() -> None:
                   f"admission_wait_p99_ms={em['admission_wait_p99_ms']:.2f} "
                   f"timeouts={em['timeouts']} shed={em['shed']} "
                   f"tenants={em['tenants']}")
+            print(f"preempted={em['preempted_requests']} "
+                  f"restored={em['restored_requests']} "
+                  f"recompute_tokens={em['recompute_tokens']} "
+                  f"quarantined={em['quarantined']} "
+                  f"exec_errors={em['exec_errors']} "
+                  f"watchdog_trips={em['watchdog_trips']} "
+                  f"draining={em['draining']} "
+                  f"faults_fired={em['faults_fired']}")
 
 
 if __name__ == "__main__":

@@ -341,6 +341,18 @@ class ForkServer:
                 break
             self.poll()
 
+    # -------------------------------------------------------------- drain
+    def drain(self) -> None:
+        """Stop admitting new work (DESIGN.md §17): every request still in
+        ``waiting`` finishes with ``finish_reason="draining"`` on the next
+        poll; in-flight requests run to completion.  Idempotent."""
+        self.engine.drain()
+
+    @property
+    def drained(self) -> bool:
+        """True once draining AND nothing is waiting or running."""
+        return self.engine.drained
+
     # ------------------------------------------------------------ metrics
     def metrics(self) -> Dict:
         m = self.engine.metrics()

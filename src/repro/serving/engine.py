@@ -41,6 +41,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.config import ModelConfig, ServeConfig
+from repro.serving import faults as faults_mod
 from repro.serving.executor import PagedExecutor, pool_bytes
 from repro.serving.fairshare import make_policy
 from repro.serving.pool import PagePool
@@ -102,12 +103,35 @@ class Request:
     prefill_share: float = 0.0    # amortized share of prefill compute —
                                   # broadcast splits the pass across the
                                   # group; feeds metrics()
-    finish_reason: str = ""       # stop | length | rejected | stalled
-    error: str = ""               # non-empty when rejected/stalled
+    # stop | length | rejected | stalled | timeout | error | draining
+    finish_reason: str = ""
+    error: str = ""               # non-empty on any non-stop/length finish
+    # preempt–restore (DESIGN.md §17): kv_len checkpointed at the last
+    # preemption (recompute accounting) and the restore-pending flag the
+    # next successful admission clears
+    preempt_kv: int = 0
+    needs_restore: bool = False
+    # output length at the last successful admission: a victim must have
+    # emitted at least one NEW token since (re)admission to be
+    # preemptable, or two requests that cannot coexist would preempt
+    # each other's restore prefills forever with zero token progress
+    admit_output_len: int = 0
 
     @property
     def params(self) -> SamplingParams:
         return self.sampling if self.sampling is not None else GREEDY
+
+    @property
+    def ptoks(self) -> List[int]:
+        """Tokens whose KV must exist before decode can proceed: the
+        prompt plus — after a preempt–restore cycle — the already
+        generated output, minus its last token (whose KV the decode step
+        consuming it writes).  Admission matching and every prefill path
+        iterate THIS, so a restored request re-prefills its generated
+        suffix exactly like prompt tokens and resumes bit-identically."""
+        if not self.output:
+            return self.prompt
+        return self.prompt + self.output[:-1]
 
 
 class Engine:
@@ -153,17 +177,28 @@ class Engine:
             self.tree = RadixTree(self.base_pool)
         if tiered:
             # device↔host byte movement + back-pressure (DESIGN.md §10);
-            # bound late: the executor/trees must exist first.
+            # bound late: the executor/trees must exist first.  The fault
+            # sites model IO errors on the transfer path (§17): tiers.py
+            # catches them, counts tier_io_errors, and falls back (failed
+            # demote → true eviction; failed promote → stay host-tier).
+            def _export(kind):
+                def fn(p):
+                    self.faults.io("tier_demote")
+                    return self.executor.export_pages(kind, p)
+                return fn
+
+            def _import(kind):
+                def fn(p, b):
+                    self.faults.io("tier_promote")
+                    self.executor.import_pages(kind, p, b)
+                return fn
+
             self.base_pool.bind(
-                export_fn=lambda p: self.executor.export_pages("base", p),
-                import_fn=lambda p, b: self.executor.import_pages(
-                    "base", p, b),
+                export_fn=_export("base"), import_fn=_import("base"),
                 pressure_fn=lambda n: self._evict(self.base_pool, n))
             if disagg:
                 self.res_pool.bind(
-                    export_fn=lambda p: self.executor.export_pages("res", p),
-                    import_fn=lambda p, b: self.executor.import_pages(
-                        "res", p, b),
+                    export_fn=_export("res"), import_fn=_import("res"),
                     pressure_fn=lambda n: self._evict(self.res_pool, n))
         self.waiting: List[Request] = []
         self.running: List[Request] = []
@@ -185,6 +220,22 @@ class Engine:
         self.stalled = 0              # requests failed by stall detection
         self.timeouts = 0             # waiting requests past deadline_s
         self.shed = 0                 # requests rejected by overload bounds
+        # fault tolerance (DESIGN.md §17): deterministic fault injection
+        # (inert when no plan is configured), preempt–restore accounting,
+        # quarantine/executor-isolation counters, drain + watchdog state
+        self.faults = faults_mod.from_config(sc)
+        self.preempted = 0            # requests checkpointed + requeued
+        self.restored = 0             # preempted requests re-admitted
+        self.recompute_tokens = 0     # checkpointed KV the restore had to
+                                      # re-prefill (tier full / evicted)
+        self.quarantined = 0          # rows failed by the isfinite guard
+        self.exec_errors = 0          # executor/step exceptions isolated
+        self.watchdog_trips = 0       # stuck-pump detections (frontend)
+        self.draining = False         # True: admission stopped, in-flight
+                                      # requests run to completion
+        self.last_step_at = time.time()   # watchdog heartbeat
+        self._no_admit = 0            # consecutive steps admission was
+                                      # blocked on memory (preempt trigger)
         # pluggable admission (DESIGN.md §15): FIFO (seed behaviour) or
         # weighted fair share across tenants; the policy probes prefix-hit
         # probability through the radix tree and per-tenant pinned pages
@@ -229,8 +280,14 @@ class Engine:
 
     # -------------------------------------------------------- fork/admit
     def _match(self, req: Request):
-        """Prefix-match per policy. Returns (base_pages, res_pages, reuse)."""
-        toks = req.prompt
+        """Prefix-match per policy. Returns (base_pages, res_pages, reuse).
+
+        Matches ``req.ptoks`` (prompt + committed output), not just the
+        prompt: a preempted request's checkpointed KV lives in the radix
+        tree under exactly that sequence, so restore is an ordinary
+        prefix hit — device pages shared directly, host-tier pages
+        promoted, evicted spans re-prefilled (DESIGN.md §17)."""
+        toks = req.ptoks
         if self.mode == "forkkv":
             fr = self.dual.fork(toks, req.adapter_id, lock=True)
             req.fork = fr
@@ -334,6 +391,11 @@ class Engine:
     def _alloc(self, pool: PagePool, n: int) -> Optional[List[int]]:
         if n == 0:
             return []
+        if self.faults.fire("pool_alloc"):
+            # injected allocation failure (DESIGN.md §17): indistinguishable
+            # from real exhaustion downstream — admission retries, and the
+            # preempt trigger fires if the "pressure" persists
+            return None
         pages = pool.alloc(n)
         if pages is None:
             self._evict(pool, n - pool.free_pages)
@@ -372,15 +434,27 @@ class Engine:
             req.res_pages = res_pages + new_res
         req.owned_base = new_base
         req.base_pages = base_pages + new_base
-        # resume computing after the usable (both-cache) prefix
+        # resume computing after the usable (both-cache) prefix; for a
+        # restored request ptoks extends past the prompt into the
+        # generated output, so the uncovered suffix — and ONLY it — is
+        # re-prefilled (DESIGN.md §17)
+        toks = req.ptoks
         req.prefill_pos = reuse
         # never resume inside a partial page of reused cache
         req.prefill_pos = (req.prefill_pos // page) * page
         req.kv_len = req.prefill_pos
-        req.state = "prefill" if req.prefill_pos < len(req.prompt) \
+        req.state = "prefill" if req.prefill_pos < len(toks) \
             else "decode"
         if req.state == "decode":
-            req.kv_len = len(req.prompt)
+            req.kv_len = len(toks)
+        if req.needs_restore:
+            req.needs_restore = False
+            self.restored += 1
+            # checkpointed KV the match did NOT cover must be recomputed
+            # (host tier full at preempt time, or evicted since)
+            self.recompute_tokens += max(
+                0, min(req.preempt_kv, len(toks)) - req.prefill_pos)
+        req.admit_output_len = len(req.output)
         return True
 
     # ------------------------------------------------------------ prefill
@@ -414,14 +488,16 @@ class Engine:
         # the executor owns the shape policy: one plan drives both the
         # prompt slicing here and the batch padding inside prefill_batch
         _, chunk = self.executor.prefill_plan(len(group))
-        chunks, starts, aids, btsb, btsr, wbs, wrs, ends = \
-            [], [], [], [], [], [], [], []
+        chunks, starts, aids, btsb, btsr, wbs, wrs, ends, plens = \
+            [], [], [], [], [], [], [], [], []
         temps, tks, tps, seeds, spos = [], [], [], [], []
         for r in group:
+            toks = r.ptoks
+            plens.append(len(toks))
             start = r.prefill_pos
-            end = min(len(r.prompt), start + chunk)
+            end = min(len(toks), start + chunk)
             ends.append(end)
-            chunks.append(r.prompt[start:end])
+            chunks.append(toks[start:end])
             starts.append(start)
             aids.append(r.adapter_id)
             btsb.append(list(r.base_pages))
@@ -438,30 +514,44 @@ class Engine:
             tps.append(sp.top_p)
             seeds.append(sp.seed)
             spos.append(len(r.output))
+        poison = [1 if self.faults.fire("nan_logits", key=r.rid) else 0
+                  for r in group] if self.faults.active else None
         t0 = time.perf_counter()
-        next_toks, _ = self.executor.prefill_batch(
+        next_toks, _, row_ok = self.executor.prefill_batch(
             chunks, starts, aids, btsb, btsr, wbs, wrs, chunk,
-            temps=temps, top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
+            temps=temps, top_ks=tks, top_ps=tps, seeds=seeds, spos=spos,
+            poison=poison)
         self.prefill_ms += (time.perf_counter() - t0) * 1e3
-        host_toks = None
+        host_toks = host_ok = None
         for i, r in enumerate(group):
             r.prefill_pos = ends[i]
             r.kv_len = ends[i]
             n = len(chunks[i])
             r.prefilled_tokens += n
             r.prefill_share += n
-            if ends[i] < len(r.prompt):
+            if ends[i] < plens[i]:
                 continue
             if r.max_new_tokens == 0:
                 # context-only request (session prefill): the cache is the
                 # product — commit it and finish without generating
                 self._finish(r, reason="length")
                 continue
-            r.state = "decode"
             if host_toks is None:       # single blocking D2H for the step
                 t0 = time.perf_counter()
                 host_toks = np.asarray(next_toks)
+                host_ok = np.asarray(row_ok)
                 self.sync_ms += (time.perf_counter() - t0) * 1e3
+            if not bool(host_ok[i]):
+                # quarantine (DESIGN.md §17): non-finite logits fail THIS
+                # row; co-batched requests proceed untouched
+                self._quarantine(r)
+                continue
+            r.state = "decode"
+            if r.output:
+                # restored request: its last pre-preemption token was
+                # never consumed — the next decode step takes it as
+                # input; no new token is emitted here (greedy parity)
+                continue
             tok = int(host_toks[i])
             if r.first_token_at == 0.0:
                 r.first_token_at = time.time()
@@ -550,16 +640,25 @@ class Engine:
             tps.append(sp.top_p)
             seeds.append(sp.seed)
             spos.append(len(r.output))
+        poison = [1 if self.faults.fire("nan_logits", key=r.rid) else 0
+                  for r in batch] if self.faults.active else None
         t0 = time.perf_counter()
-        next_toks, _ = self.executor.decode(toks, kvl, ids, btb, btr, wpb,
-                                            wpr, woff, temps=temps,
-                                            top_ks=tks, top_ps=tps,
-                                            seeds=seeds, spos=spos)
+        next_toks, _, row_ok = self.executor.decode(
+            toks, kvl, ids, btb, btr, wpb, wpr, woff, temps=temps,
+            top_ks=tks, top_ps=tps, seeds=seeds, spos=spos, poison=poison)
         self.decode_ms += (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
         host_toks = np.asarray(next_toks)   # ONE blocking D2H per step
+        host_ok = np.asarray(row_ok)        # quarantine guard rides it
         self.sync_ms += (time.perf_counter() - t0) * 1e3
         for i, r in enumerate(batch):
+            if not bool(host_ok[i]):
+                # quarantine (DESIGN.md §17): this row's logits went
+                # non-finite — fail it alone, the batch continues; its
+                # kv_len is NOT advanced, so the poisoned write at
+                # position kv_len stays uncommitted garbage
+                self._quarantine(r)
+                continue
             r.kv_len += 1
             tok = int(host_toks[i])
             if r.first_token_at == 0.0:   # fully-cached admission: the
@@ -574,13 +673,11 @@ class Engine:
         return True
 
     # ------------------------------------------------------------- finish
-    def _finish(self, req: Request, reason: str = "length") -> None:
-        req.state = "done"
-        req.finish_reason = req.finish_reason or reason
-        req.finished_at = time.time()
+    def _commit_cache(self, req: Request) -> None:
+        """Insert the request's computed-KV prefix into the radix tree
+        (the tree increfs the pages it adopts)."""
         full_seq = req.prompt + req.output[:-1]
-        cached_len = req.kv_len
-        seq = full_seq[:cached_len]
+        seq = full_seq[:req.kv_len]
         if self.mode == "forkkv":
             self.dual.commit(seq, req.adapter_id,
                              req.base_pages, req.res_pages)
@@ -588,6 +685,18 @@ class Engine:
             self.forest.insert(req.adapter_id, seq, req.base_pages)
         else:
             self.tree.insert(seq, req.base_pages)
+
+    def _finish(self, req: Request, reason: str = "length",
+                commit: bool = True) -> None:
+        """``commit=False`` (quarantine / executor-error isolation,
+        DESIGN.md §17) skips the tree insert and the proposer warm-up —
+        a poisoned request's cache must never be adopted as shared state
+        — while still reclaiming every page it owned."""
+        req.state = "done"
+        req.finish_reason = req.finish_reason or reason
+        req.finished_at = time.time()
+        if commit:
+            self._commit_cache(req)
         # drop this request's ownership; tree holds its own refs now
         self.base_pool.decref(req.owned_base)
         self.base_pool.decref(req.coowned_base)
@@ -597,11 +706,114 @@ class Engine:
         self.running.remove(req)
         self.done.append(req)
         self._spec_ctl.pop(req.rid, None)
-        if req.output and not req.is_context:
+        if commit and req.output and not req.is_context:
             # warm the n-gram cache with the committed sequence so later
             # forks replaying this trajectory get high-acceptance drafts
             self.proposer.observe(req.prompt + req.output[:-1])
         self.policy.on_finish(req, req.finished_at)
+
+    # -------------------------------------------------------- quarantine
+    def _quarantine(self, req: Request, why: str = "") -> None:
+        """Fail ONE poisoned running request (DESIGN.md §17): terminal
+        ``finish_reason="error"``, pages reclaimed, cache NOT committed,
+        co-batched requests untouched."""
+        self.quarantined += 1
+        req.error = why or (
+            f"error: request {req.rid} quarantined — non-finite logits "
+            f"at step {self.steps}")
+        req.finish_reason = "error"
+        self._finish(req, reason="error", commit=False)
+
+    def _fail_batch(self, exc: Exception) -> bool:
+        """Executor-level exception isolation (DESIGN.md §17): a raising
+        step call cannot say which rows' device state survived, so every
+        running request fails terminally (``finish_reason="error"``,
+        pages reclaimed, nothing committed) and the PUMP SURVIVES —
+        waiting requests admit and run on the next step."""
+        self.exec_errors += 1
+        victims = list(self.running)
+        for r in victims:
+            r.error = (f"error: request {r.rid} failed — executor error "
+                       f"at step {self.steps}: {exc}")
+            r.finish_reason = "error"
+            self._finish(r, reason="error", commit=False)
+        return bool(victims)
+
+    # ---------------------------------------------------- preempt–restore
+    def _preempt(self, req: Request) -> None:
+        """Checkpoint a running request's computed KV into the radix tree
+        and send it back to the waiting queue (DESIGN.md §17).
+
+        The checkpoint IS an ordinary cache commit — the tree adopts the
+        full pages covering ``(prompt + output[:-1])[:kv_len]`` — so all
+        existing machinery applies unchanged: under continued pressure
+        the tree LRU demotes the pages to the host tier (tiered config)
+        or destroys them (restore re-prefills = recompute), and
+        re-admission restores them via the normal ``_match`` walk.  The
+        generated ``output`` is kept: streaming consumers' indices stay
+        valid, and ``ptoks`` replays it as prefill on restore."""
+        self.preempted += 1
+        req.preempt_kv = req.kv_len
+        req.needs_restore = True
+        if req.kv_len > 0:
+            self._commit_cache(req)
+        self.base_pool.decref(req.owned_base)
+        self.base_pool.decref(req.coowned_base)
+        if self.mode == "forkkv":
+            self.res_pool.decref(req.owned_res)
+        self._release_lock(req)
+        self.running.remove(req)
+        req.state = "waiting"
+        req.prefill_pos = 0
+        req.kv_len = 0
+        req.base_pages, req.res_pages = [], []
+        req.owned_base, req.owned_res, req.coowned_base = [], [], []
+        # back of the queue: the blocked request that triggered the
+        # preemption gets first claim on the freed pages (front insertion
+        # would re-admit the victim immediately — a preempt livelock)
+        self.waiting.append(req)
+        self.policy.on_preempt(req, time.time())
+
+    def _preempt_for(self, now: float) -> bool:
+        """Pick and preempt ONE victim so blocked admission can proceed.
+
+        Candidates: running requests that are not context prefills
+        (their session holds pins — evicting them thrashes), not
+        broadcast-fork writers (an owned page with refcount > 1 is
+        co-owned by the group; preempting the writer would orphan the
+        shared pass), and that have emitted at least one NEW token since
+        their last admission — without that progress guard, two requests
+        that cannot coexist in the pool preempt each other straight out
+        of their restore prefills forever (a zero-progress livelock
+        ``preempt_after_steps`` only delays).  A protected victim is
+        running, so it becomes eligible after its next decode step;
+        admission stays blocked at most that long.  Order is the
+        admission policy's ``preempt_order`` — worst fair-share score
+        first, newest-arrival first under FIFO."""
+        cands = [
+            r for r in self.running
+            if not r.is_context
+            and len(r.output) > r.admit_output_len
+            and not any(self.base_pool.refcount(p) > 1
+                        for p in r.owned_base)]
+        for victim in self.policy.preempt_order(cands, now):
+            self._preempt(victim)
+            return True
+        return False
+
+    # --------------------------------------------------------------- drain
+    def drain(self) -> None:
+        """Graceful drain (DESIGN.md §17): stop admitting, let in-flight
+        requests run to completion.  Every queued (never-admitted)
+        request is refused with ``finish_reason="draining"`` on the next
+        step so callers get a terminal signal (HTTP 503) instead of a
+        hang.  Idempotent."""
+        self.draining = True
+
+    @property
+    def drained(self) -> bool:
+        """True once a draining engine holds no in-flight work."""
+        return self.draining and not self.running and not self.waiting
 
     # ------------------------------------------------- broadcast fork
     def _try_broadcast(self) -> bool:
@@ -616,10 +828,11 @@ class Engine:
         for r in self.running:
             if r.state != "prefill":
                 continue
-            end = min(len(r.prompt),
+            toks = r.ptoks
+            end = min(len(toks),
                       r.prefill_pos + self.sc.max_prefill_tokens)
             end = (end // page) * page
-            if end >= len(r.prompt):
+            if end >= len(toks):
                 # leave the final tokens to an ordinary per-request prefill:
                 # the broadcast pass emits no logits, so the request's first
                 # output token must come from a real chunk ending at the
@@ -627,7 +840,7 @@ class Engine:
                 end -= page
             if end <= r.prefill_pos:
                 continue
-            key = (r.prefill_pos, tuple(r.prompt[r.prefill_pos:end]))
+            key = (r.prefill_pos, tuple(toks[r.prefill_pos:end]))
             groups.setdefault(key, []).append(r)
         best = max(groups.items(), key=lambda kv: len(kv[1]),
                    default=(None, []))
@@ -701,9 +914,12 @@ class Engine:
                 chunks.append([last] + list(rp.draft))
                 emit.append(True)
             else:
-                chunks.append(r.prompt[rp.start:rp.end])
-                emit.append(rp.end >= len(r.prompt)
-                            and r.max_new_tokens > 0)
+                toks = r.ptoks
+                chunks.append(toks[rp.start:rp.end])
+                # a restored request emits nothing on prefill completion:
+                # its last pre-preemption token is the next decode input
+                emit.append(rp.end >= len(toks)
+                            and r.max_new_tokens > 0 and not r.output)
             starts.append(rp.start)
             aids.append(r.adapter_id)
             btb.append(list(r.base_pages))
@@ -731,6 +947,8 @@ class Engine:
         n_decode = len(plan.decode_rows) + len(verify_rows)
         if plan.is_mixed:
             self.mixed_steps += 1
+        poison = [1 if self.faults.fire("nan_logits", key=rp.req.rid)
+                  else 0 for rp in rows] if self.faults.active else None
         t0 = time.perf_counter()
         if verify_rows:
             self.spec_steps += 1
@@ -738,15 +956,17 @@ class Engine:
             # 32-wide prefill tile — the verify call must stay close to a
             # decode call's cost for speculation to pay off
             qfloor = plan.q_max if not plan.prefill_rows else 0
-            next_toks, _, greedy_all, n_acc = self.executor.mixed_step(
-                chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
-                top_ks=tks, top_ps=tps, seeds=seeds, spos=spos,
-                verify=True, qfloor=qfloor)
+            next_toks, _, greedy_all, n_acc, row_ok = \
+                self.executor.mixed_step(
+                    chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
+                    top_ks=tks, top_ps=tps, seeds=seeds, spos=spos,
+                    poison=poison, verify=True, qfloor=qfloor)
         else:
             greedy_all = n_acc = None
-            next_toks, _ = self.executor.mixed_step(
+            next_toks, _, row_ok = self.executor.mixed_step(
                 chunks, starts, aids, btb, btr, wbs, wrs, temps=temps,
-                top_ks=tks, top_ps=tps, seeds=seeds, spos=spos)
+                top_ks=tks, top_ps=tps, seeds=seeds, spos=spos,
+                poison=poison)
         elapsed = (time.perf_counter() - t0) * 1e3
         # attribute wall clock by token share: a decode-only iteration is
         # pure decode_ms (bench_decode's deltas stay meaningful), a mixed
@@ -755,11 +975,12 @@ class Engine:
         dec_frac = dec_toks / max(1, plan.total_tokens)
         self.decode_ms += elapsed * dec_frac
         self.prefill_ms += elapsed * (1.0 - dec_frac)
-        host_toks = greedy_host = nacc_host = None
+        host_toks = greedy_host = nacc_host = host_ok = None
         if any(emit):               # ONE blocking D2H per iteration
             t0 = time.perf_counter()
             host_toks = np.asarray(next_toks)
-            if verify_rows:
+            host_ok = np.asarray(row_ok)   # quarantine guard rides the
+            if verify_rows:                # step's one sync (§17)
                 greedy_host = np.asarray(greedy_all)
                 nacc_host = np.asarray(n_acc)
             self.sync_ms += (time.perf_counter() - t0) * 1e3
@@ -768,6 +989,12 @@ class Engine:
         step_end = time.time()
         for i, rp in enumerate(rows):
             r = rp.req
+            if emit[i] and host_ok is not None and not bool(host_ok[i]):
+                # quarantine (DESIGN.md §17): this row went non-finite —
+                # fail it alone (kv_len untouched, nothing committed);
+                # every other row of the plan proceeds normally
+                self._quarantine(r)
+                continue
             if rp.kind == "verify":
                 # commit the accepted prefix + the bonus correction token
                 # (greedy_all[n_acc] is computed from a fully accepted
@@ -821,13 +1048,17 @@ class Engine:
             r.kv_len = rp.end
             r.prefilled_tokens += rp.q_len
             r.prefill_share += rp.q_len
-            if rp.end < len(r.prompt):
+            if rp.end < len(r.ptoks):
                 continue
             if r.max_new_tokens == 0:
                 # context-only request: the cache is the product
                 self._finish(r, reason="length")
                 continue
             r.state = "decode"
+            if r.output:
+                # restored request (emit was False): the next decode step
+                # consumes its last pre-preemption token — nothing lands
+                continue
             tok = int(host_toks[i])
             if r.first_token_at == 0.0:
                 r.first_token_at = step_end
@@ -882,14 +1113,36 @@ class Engine:
     def step(self) -> None:
         self.steps += 1
         now = time.time()
-        progress = self._expire_and_shed(now)
+        self.faults.maybe_stall()       # pump_stall site (watchdog food)
+        progress = False
+        if self.draining:
+            # drain (§17): stop admission — every queued request gets a
+            # terminal refusal (HTTP 503) while in-flight work proceeds
+            for req in list(self.waiting):
+                self.waiting.remove(req)
+                self._refuse(req, "draining",
+                             f"draining: request {req.rid} refused — "
+                             f"server is shutting down")
+                progress = True
+        else:
+            progress = self._expire_and_shed(now)
         # admit, in policy order (FIFO = the seed behaviour: strict
         # arrival order, stop at the first request that does not fit)
+        blocked = False
         while self.waiting and len(self.running) < self.sc.max_batch:
             req = self.policy.select(self.waiting, now)
             if req is None:               # every waiting tenant over budget
                 break
-            admitted = self._try_admit(req)
+            try:
+                admitted = self._try_admit(req)
+            except Exception as e:        # per-request isolation (§17): a
+                self.exec_errors += 1     # blown admission fails ONE
+                self.waiting.remove(req)  # request, not the pump
+                self._refuse(req, "error",
+                             f"error: admission of request {req.rid} "
+                             f"failed: {e}")
+                progress = True
+                continue
             if admitted is None:          # impossible request: reject, keep
                 self.waiting.remove(req)  # the engine alive for the rest
                 self.done.append(req)     # (_try_admit already finished it)
@@ -898,6 +1151,7 @@ class Engine:
                 progress = True
                 continue
             if not admitted:
+                blocked = True
                 break
             self.waiting.remove(req)
             self.running.append(req)
@@ -909,25 +1163,43 @@ class Engine:
             if req.state == "decode" and req.max_new_tokens == 0:
                 # fully-cached context-only request: nothing to compute
                 self._finish(req, reason="length")
-        if self.sc.mixed_batching:
-            # iteration-level continuous batching (§14): broadcast-fork
-            # groups still take precedence (ONE shared base-trajectory
-            # pass), then one token-budget plan — all runnable decode
-            # rows + budget-filling prefill chunks — runs as one call
-            if self._try_broadcast():
+        # preempt–restore trigger (§17): admission blocked on pages for
+        # preempt_after_steps consecutive steps → checkpoint one victim
+        if blocked and self.sc.preempt:
+            self._no_admit += 1
+            if self._no_admit >= self.sc.preempt_after_steps and \
+                    self._preempt_for(now):
+                self._no_admit = 0
                 progress = True
-            if self._run_mixed(self.scheduler.plan(
-                    self.running, propose=self._propose)):
-                progress = True
-        else:
-            # legacy phase-separated loop: one batched prefill call
-            # (broadcast if several agents share an identical upcoming
-            # chunk), then one decode call
-            if self._try_broadcast():
-                progress = True
-            elif self._prefill_batch():
-                progress = True
-            if self._decode_all():
+        elif not blocked:
+            self._no_admit = 0
+        try:
+            self.faults.io("executor")    # injected step failure (§17)
+            if self.sc.mixed_batching:
+                # iteration-level continuous batching (§14): broadcast-
+                # fork groups still take precedence (ONE shared base-
+                # trajectory pass), then one token-budget plan — all
+                # runnable decode rows + budget-filling prefill chunks —
+                # runs as one call
+                if self._try_broadcast():
+                    progress = True
+                if self._run_mixed(self.scheduler.plan(
+                        self.running, propose=self._propose)):
+                    progress = True
+            else:
+                # legacy phase-separated loop: one batched prefill call
+                # (broadcast if several agents share an identical upcoming
+                # chunk), then one decode call
+                if self._try_broadcast():
+                    progress = True
+                elif self._prefill_batch():
+                    progress = True
+                if self._decode_all():
+                    progress = True
+        except Exception as e:
+            # executor isolation (§17): the step call died — fail the
+            # affected requests terminally, keep the pump alive
+            if self._fail_batch(e):
                 progress = True
         # stall detection: waiting work + nothing admitted/prefilled/decoded
         # for stall_limit consecutive steps -> fail the head request loudly
@@ -954,6 +1226,7 @@ class Engine:
                                    self.base_pool.used_pages)
         self.peak_res_pages = max(self.peak_res_pages,
                                   self.res_pool.used_pages)
+        self.last_step_at = time.time()   # watchdog heartbeat (§17)
 
     def run(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
@@ -996,7 +1269,8 @@ class Engine:
                             if not r.error)
         tier = {"tier_hits": 0, "demoted_pages": 0, "demoted_bytes": 0,
                 "promoted_pages": 0, "promoted_bytes": 0,
-                "host_evicted_pages": 0, "dropped_device_pages": 0}
+                "host_evicted_pages": 0, "dropped_device_pages": 0,
+                "tier_io_errors": 0}
         for pool in (self.base_pool, self.res_pool):
             if getattr(pool, "is_tiered", False):
                 for k, v in pool.stats().items():
@@ -1062,6 +1336,18 @@ class Engine:
             "preemptions": self.preemptions,
             "rejected": self.rejected,
             "stalled": self.stalled,
+            # fault tolerance (DESIGN.md §17): preempt–restore accounting,
+            # quarantine/isolation counters, drain + watchdog state, and
+            # which injected fault sites actually fired (empty plan = {})
+            "preempted_requests": self.preempted,
+            "restored_requests": self.restored,
+            "recompute_tokens": self.recompute_tokens,
+            "quarantined": self.quarantined,
+            "exec_errors": self.exec_errors,
+            "watchdog_trips": self.watchdog_trips,
+            "draining": self.draining,
+            "drained": self.drained,
+            "faults_fired": self.faults.stats(),
             # multi-tenant admission (DESIGN.md §15): live queue state,
             # admission-wait distribution over a bounded recent window,
             # and per-tenant accept/reject/budget accounting

@@ -239,7 +239,7 @@ class PagedExecutor:
     # ------------------------------------------------------------- decode
     def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
                    bt_r, wpage_b, wpage_r, woff, temps, top_ks, top_ps,
-                   seeds, spos, *, sampled):
+                   seeds, spos, poison, *, sampled):
         """One decode step for a padded batch.
 
         tokens/kv_len/adapter_ids: (B,); bt_*: (B, W) block tables (W is
@@ -248,7 +248,15 @@ class PagedExecutor:
         token's KV into (dump page for inactive rows); woff: (B,) in-page
         offsets; temps/top_ks/top_ps/seeds/spos: (B,) per-row sampling
         params (temp <= 0 -> greedy argmax, the seed's exact path);
-        sampled: static — False compiles the argmax-only body.
+        poison: (B,) fault-injection mask — rows > 0 get their logits
+        forced to NaN in-jit (DESIGN.md §17), exercising the same
+        quarantine path a real numeric blow-up takes; sampled: static —
+        False compiles the argmax-only body.
+
+        Returns ``(pools, next_tok, logits, row_ok)`` where ``row_ok`` is
+        the per-row ``isfinite(logits).all()`` guard — it rides the
+        step's existing single host sync, so quarantine detection costs
+        zero extra syncs.
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
@@ -308,16 +316,18 @@ class PagedExecutor:
             h = base.rms_norm(x, p_l["ln2"], cfg.norm_eps)
             x = x + tfm.ffn(p_l, h, cfg)
         logits = tfm.unembed(self.params, x, cfg)[:, 0]
+        logits = jnp.where(poison[:, None] > 0, jnp.nan, logits)
+        row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
         if sampled:
             next_tok = sample_tokens(logits, temps, top_ks, top_ps, seeds,
                                      spos)
         else:
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return new_pools, next_tok, logits
+        return new_pools, next_tok, logits, row_ok
 
     def decode(self, tokens, kv_len, adapter_ids, base_tables, res_tables,
                wpage_b, wpage_r, woff, temps=None, top_ks=None,
-               top_ps=None, seeds=None, spos=None):
+               top_ps=None, seeds=None, spos=None, poison=None):
         """One decode step over ``len(tokens)`` live rows.
 
         ``base_tables``/``res_tables`` are RAW per-request page lists; this
@@ -326,7 +336,8 @@ class PagedExecutor:
         crop/pad to the bucketed live width — so compile variants stay
         O(log max_batch · log max_pages_per_req) while per-step HBM
         traffic tracks actual ``kv_len``.  Returns DEVICE arrays
-        ``(next_tok, logits)``; rows past the live count are padding.
+        ``(next_tok, logits, row_ok)``; rows past the live count are
+        padding.
         """
         bsz = len(tokens)
         assert bsz <= self.sc.max_batch, (bsz, self.sc.max_batch)
@@ -346,6 +357,7 @@ class PagedExecutor:
         top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
         seeds = list(seeds) if seeds is not None else [0] * bsz
         spos = list(spos) if spos is not None else [0] * bsz
+        poison = list(poison) if poison is not None else [0] * bsz
         pad = bpad - bsz
         tokens = list(tokens) + [0] * pad
         kv_len = list(kv_len) + [0] * pad
@@ -360,7 +372,8 @@ class PagedExecutor:
         top_ps += [1.0] * pad
         seeds += [0] * pad
         spos += [0] * pad
-        self.pools, next_tok, logits = self._decode(
+        poison += [0] * pad
+        self.pools, next_tok, logits, row_ok = self._decode(
             self.pools, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(kv_len, jnp.int32),
             jnp.asarray(adapter_ids, jnp.int32),
@@ -369,9 +382,9 @@ class PagedExecutor:
             jnp.asarray(woff, jnp.int32),
             jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
             jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(spos, jnp.int32),
+            jnp.asarray(spos, jnp.int32), jnp.asarray(poison, jnp.int32),
             sampled=any(t > 0 for t in temps))
-        return next_tok, logits
+        return next_tok, logits, row_ok
 
     def decode_cache_size(self) -> int:
         """Number of compiled decode variants (bucket coverage probe)."""
@@ -383,7 +396,7 @@ class PagedExecutor:
     # ------------------------------------------------------------ prefill
     def _prefill_fn(self, pools: Pools, tokens, start, n_valid, adapter_ids,
                     bt_b, bt_r, wpages_b, wpages_r, temps, top_ks, top_ps,
-                    seeds, spos, *, chunk, sampled, unified=False,
+                    seeds, spos, poison, *, chunk, sampled, unified=False,
                     verify=False):
         """Chunked prefill for a PADDED BATCH of requests.
 
@@ -415,6 +428,10 @@ class PagedExecutor:
         run the engine commits (accepted drafts + the bonus correction
         token, whose input prefix is fully accepted so it is the true
         greedy continuation).
+
+        ``poison``: (B,) fault-injection mask (rows > 0 → NaN logits);
+        every return shape ends with ``row_ok``, the per-row isfinite
+        guard on the final logits (DESIGN.md §17).
         """
         cfg = self.cfg
         bsz = tokens.shape[0]
@@ -508,14 +525,16 @@ class PagedExecutor:
         else:
             x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
             logits = tfm.unembed(self.params, x_last, cfg)[:, 0]   # (B, V)
+        logits = jnp.where(poison[:, None] > 0, jnp.nan, logits)
+        row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
         if sampled:
             next_tok = sample_tokens(logits, temps, top_ks, top_ps, seeds,
                                      spos)
         else:
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if verify:
-            return new_pools, next_tok, logits, greedy_all, n_acc
-        return new_pools, next_tok, logits
+            return new_pools, next_tok, logits, greedy_all, n_acc, row_ok
+        return new_pools, next_tok, logits, row_ok
 
     def prefill_plan(self, n_rows: int):
         """Shape policy for a batched prefill of ``n_rows`` requests:
@@ -531,12 +550,12 @@ class PagedExecutor:
     def prefill_batch(self, chunks, starts, adapter_ids, base_tables,
                       res_tables, wpages_b, wpages_r, chunk_size,
                       temps=None, top_ks=None, top_ps=None, seeds=None,
-                      spos=None):
+                      spos=None, poison=None):
         """Batched chunked prefill: ``len(chunks)`` rows padded per
         :meth:`prefill_plan`, each row padded to ``chunk_size`` tokens.
         Block tables arrive as RAW page lists.  Returns DEVICE arrays
-        ``(next_tok, logits)`` — the engine syncs once per step, not per
-        chunk.
+        ``(next_tok, logits, row_ok)`` — the engine syncs once per step,
+        not per chunk.
         """
         bsz = len(chunks)
         bpad = self.prefill_plan(bsz)[0]
@@ -545,6 +564,7 @@ class PagedExecutor:
         top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
         seeds = list(seeds) if seeds is not None else [0] * bsz
         spos = list(spos) if spos is not None else [0] * bsz
+        poison = list(poison) if poison is not None else [0] * bsz
         if self.use_paged:
             # prefill width bucketing (§13): tables cover the batch's
             # largest post-chunk kv extent, bucketed like decode widths
@@ -582,7 +602,8 @@ class PagedExecutor:
         top_ps += [1.0] * pad
         seeds += [0] * pad
         spos += [0] * pad
-        self.pools, next_tok, logits = self._prefill(
+        poison += [0] * pad
+        self.pools, next_tok, logits, row_ok = self._prefill(
             self.pools, jnp.asarray(toks, jnp.int32),
             jnp.asarray(starts, jnp.int32), jnp.asarray(nvalid, jnp.int32),
             jnp.asarray(adapter_ids, jnp.int32),
@@ -590,15 +611,15 @@ class PagedExecutor:
             jnp.asarray(wb, jnp.int32), jnp.asarray(wr, jnp.int32),
             jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
             jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(spos, jnp.int32),
+            jnp.asarray(spos, jnp.int32), jnp.asarray(poison, jnp.int32),
             chunk=chunk_size, sampled=any(t > 0 for t in temps))
-        return next_tok, logits
+        return next_tok, logits, row_ok
 
     # ------------------------------------------------------- mixed batch
     def mixed_step(self, chunks, starts, adapter_ids, base_tables,
                    res_tables, wpages_b, wpages_r, temps=None, top_ks=None,
-                   top_ps=None, seeds=None, spos=None, verify=False,
-                   qfloor=0):
+                   top_ps=None, seeds=None, spos=None, poison=None,
+                   verify=False, qfloor=0):
         """One iteration-level mixed batch (DESIGN.md §14): decode rows
         (``chunks[i] == [last_token]``, ``starts[i] == kv_len``) and
         chunked-prefill rows side by side, executed as a SINGLE call.
@@ -610,12 +631,13 @@ class PagedExecutor:
         mixed plans pad rows to the power-of-two chunk width of the
         LONGEST row and run the unified kernel grid, each row's real
         length riding in as its q-length.  Returns DEVICE arrays
-        ``(next_tok, logits)``; rows past ``len(chunks)`` are padding.
+        ``(next_tok, logits, row_ok)``; rows past ``len(chunks)`` are
+        padding.
 
         ``verify=True`` (DESIGN.md §16): the plan carries speculative
         verify rows (``chunks[i] == [t0, d_1..d_k]``); returns the
-        extended tuple ``(next_tok, logits, greedy_all, n_acc)`` with the
-        per-position greedy tokens and accepted-prefix lengths.
+        extended tuple ``(next_tok, logits, greedy_all, n_acc, row_ok)``
+        with the per-position greedy tokens and accepted-prefix lengths.
         ``qfloor`` overrides the q-tile floor — verify-dominated plans
         with no prefill rows pad to pow2(k+1) instead of the 32-wide
         prefill tile, so a k=4 verify step is not 8x padding waste.
@@ -630,7 +652,8 @@ class PagedExecutor:
                 base_tables, res_tables,
                 [w[0] for w in wpages_b], [w[0] for w in wpages_r],
                 [s % self.page for s in starts], temps=temps,
-                top_ks=top_ks, top_ps=top_ps, seeds=seeds, spos=spos)
+                top_ks=top_ks, top_ps=top_ps, seeds=seeds, spos=spos,
+                poison=poison)
         # shape-bucket with FLOORS, not just pow2: which rows (and which
         # chunk lengths) coincide in a plan is timing-sensitive, so
         # bucketing purely by pow2(bsz)/pow2(qmax) sprays one compiled
@@ -650,6 +673,7 @@ class PagedExecutor:
         top_ps = list(top_ps) if top_ps is not None else [1.0] * bsz
         seeds = list(seeds) if seeds is not None else [0] * bsz
         spos = list(spos) if spos is not None else [0] * bsz
+        poison = list(poison) if poison is not None else [0] * bsz
         if self.use_paged:
             w = self._bucket_width(max(
                 -(-(starts[i] + len(chunks[i])) // self.page)
@@ -685,6 +709,7 @@ class PagedExecutor:
         top_ps += [1.0] * pad
         seeds += [0] * pad
         spos += [0] * pad
+        poison += [0] * pad
         out = self._prefill(
             self.pools, jnp.asarray(toks, jnp.int32),
             jnp.asarray(starts, jnp.int32), jnp.asarray(nvalid, jnp.int32),
@@ -693,7 +718,7 @@ class PagedExecutor:
             jnp.asarray(wb, jnp.int32), jnp.asarray(wr, jnp.int32),
             jnp.asarray(temps, jnp.float32), jnp.asarray(top_ks, jnp.int32),
             jnp.asarray(top_ps, jnp.float32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(spos, jnp.int32),
+            jnp.asarray(spos, jnp.int32), jnp.asarray(poison, jnp.int32),
             chunk=qpad, sampled=any(t > 0 for t in temps), unified=True,
             verify=verify)
         self.pools = out[0]

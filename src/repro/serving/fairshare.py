@@ -213,6 +213,30 @@ class AdmissionPolicy:
             st.rejected += 1
         self._hit_cache.pop(req.rid, None)
 
+    # -------------------------------------------------------- preemption
+    def preempt_order(self, running: Sequence[Any],
+                      now: float) -> List[Any]:
+        """Victim preference for preempt–restore (DESIGN.md §17): the
+        engine preempts the FIRST feasible candidate in this order when
+        the device pool stays exhausted.  The base (FIFO-compatible) rule
+        is newest-admitted first — the request that has invested the
+        least compute loses it.  Accounting is NOT touched here; the
+        engine calls :meth:`on_preempt` once a victim is actually
+        checkpointed."""
+        return sorted(running, key=lambda r: r.arrival, reverse=True)
+
+    def on_preempt(self, req, now: float) -> None:
+        """An admitted request went back to the waiting queue.  Reverse
+        the in-flight budgets (it no longer holds batch/page resources)
+        but KEEP the service already billed: the tenant paid for compute
+        that really ran, and keeping it billed makes the same tenant's
+        requests the natural next victims under fair share instead of a
+        preempt–readmit livelock."""
+        st = self.tenant(req.tenant)
+        st.concurrent = max(0, st.concurrent - 1)
+        st.tokens_in_flight = max(
+            0, st.tokens_in_flight - (len(req.prompt) + req.max_new_tokens))
+
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         return {name: {"weight": st.weight, "service": round(st.service, 2),
                        "vtime": round(st.vtime, 2),
@@ -271,6 +295,15 @@ class FairShareAdmission(AdmissionPolicy):
         share would have admitted LAST is the one shed first."""
         scored = sorted(((self.score(r, now), i, r)
                          for i, r in enumerate(waiting)), reverse=True)
+        return [r for _, _, r in scored]
+
+    def preempt_order(self, running: Sequence[Any],
+                      now: float) -> List[Any]:
+        """Preemption victims: worst fair-share score first — the same
+        ordering shedding uses, so the request fair share values least
+        is the one that loses its batch slot under pressure."""
+        scored = sorted(((self.score(r, now), i, r)
+                         for i, r in enumerate(running)), reverse=True)
         return [r for _, _, r in scored]
 
 

@@ -41,7 +41,12 @@ API (JSON bodies; token ids, not text — the repo is tokenizer-free):
       ``Engine.metrics()`` as JSON (queue depth, admission waits,
       per-tenant counters, cache/tier/kernel metrics).
   ``GET /healthz``
-      liveness.
+      health states (DESIGN.md §17): ``healthy`` / ``overloaded`` (200),
+      ``draining`` / ``stuck`` (503 — take the replica out of rotation).
+  ``POST /v1/drain``
+      graceful drain: stop admission (new work → 503 + Retry-After),
+      finish everything in flight.  ``SIGTERM`` in ``launch/serve.py``
+      triggers the same path.
 
 Status mapping: admission rejects a request by FINISHING it (the engine
 never throws at a tenant), and the frontend translates the terminal
@@ -65,6 +70,7 @@ import http.client
 import itertools
 import json
 import queue
+import random
 import threading
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
@@ -75,7 +81,18 @@ from repro.serving.sampling import SamplingParams
 __all__ = ["HttpFrontend", "ForkClient"]
 
 
+# every key a completion/fork body may carry; anything else is a typo the
+# caller should hear about as a 400, not silently-ignored greedy sampling
+_KNOWN_KEYS = frozenset({
+    "prompt", "instruction", "adapter_id", "tenant", "deadline_s", "stream",
+    "temperature", "top_k", "top_p", "seed", "max_new_tokens",
+    "stop_token_ids", "speculate", "spec_k"})
+
+
 def _sampling_from(body: Dict) -> SamplingParams:
+    unknown = sorted(set(body) - _KNOWN_KEYS)
+    if unknown:
+        raise ValueError(f"unknown sampling key(s): {', '.join(unknown)}")
     spec = body.get("speculate")          # absent/None = engine default
     return SamplingParams(
         temperature=float(body.get("temperature", 0.0)),
@@ -95,8 +112,10 @@ def _status_for(finish_reason: str, retry_after_s: float) -> int:
         return 429 if retry_after_s > 0 else 400
     if finish_reason == "timeout":
         return 504
-    if finish_reason == "stalled":
+    if finish_reason in ("stalled", "draining"):
         return 503
+    if finish_reason == "error":
+        return 500
     return 200
 
 
@@ -132,6 +151,9 @@ class HttpFrontend:
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
         self._pump_thread: Optional[threading.Thread] = None
+        self._watchdog_thread: Optional[threading.Thread] = None
+        self._wd_tripped = False
+        self._draining = False
         self.requests_served = 0
 
     # ------------------------------------------------------------ lifecycle
@@ -154,6 +176,25 @@ class HttpFrontend:
         if self._thread is not None:
             self._thread.join(timeout=10)
 
+    # --------------------------------------------------------------- drain
+    def begin_drain(self) -> None:
+        """Stop admitting new work; in-flight requests run to completion
+        (DESIGN.md §17).  Non-blocking and signal-safe: the frontend flag
+        flips immediately (new HTTP requests get 503) and the engine-side
+        drain runs as a queued pump op (``queue.Queue.put`` is safe from
+        a signal handler).  Idempotent."""
+        if self._draining:
+            return
+        self._draining = True
+        self._ops.put(self.server.drain)
+
+    @property
+    def drained(self) -> bool:
+        """True once draining AND the engine is empty AND every SSE
+        stream has delivered its terminal event."""
+        return self._draining and self.server.engine.drained \
+            and not self._streams
+
     async def _amain(self) -> None:
         self._loop = asyncio.get_running_loop()
         srv = await asyncio.start_server(self._handle_conn, self.host,
@@ -162,6 +203,10 @@ class HttpFrontend:
         self._pump_thread = threading.Thread(target=self._pump, daemon=True,
                                              name="forkkv-pump")
         self._pump_thread.start()
+        if self.server.engine.sc.watchdog_s > 0:
+            self._watchdog_thread = threading.Thread(
+                target=self._watchdog, daemon=True, name="forkkv-watchdog")
+            self._watchdog_thread.start()
         self._ready.set()
         try:
             async with srv:
@@ -170,6 +215,24 @@ class HttpFrontend:
         finally:
             self._stop.set()
             self._pump_thread.join(timeout=10)
+
+    def _watchdog(self) -> None:
+        """Stuck-pump detector (DESIGN.md §17): with work in flight, the
+        step loop should stamp ``engine.last_step_at`` continuously; a
+        gap beyond ``watchdog_s`` means the pump wedged (deadlocked op,
+        hung device call).  One trip per stall episode — the counter is
+        a health signal surfaced via ``/healthz`` and metrics, not a
+        kill switch (the operator decides whether to restart)."""
+        eng = self.server.engine
+        limit = eng.sc.watchdog_s
+        while not self._stop.wait(max(0.01, limit / 4)):
+            busy = bool(eng.waiting or eng.running)
+            stalled = busy and (time.time() - eng.last_step_at) > limit
+            if stalled and not self._wd_tripped:
+                self._wd_tripped = True
+                eng.watchdog_trips += 1
+            elif not stalled:
+                self._wd_tripped = False
 
     # ------------------------------------------------------------ pump side
     # The pump thread is the ONLY thread that touches the ForkServer /
@@ -246,7 +309,12 @@ class HttpFrontend:
                 raw = await reader.readexactly(n)
                 try:
                     body = json.loads(raw)
-                except json.JSONDecodeError:
+                    if not isinstance(body, dict):
+                        raise ValueError("body must be a JSON object")
+                except (ValueError, UnicodeDecodeError):
+                    # covers JSONDecodeError (a ValueError) AND invalid
+                    # utf-8 — either way the caller hears 400, not a
+                    # dropped connection (§17 satellite)
                     await self._respond(writer, 400,
                                         {"error": "invalid JSON body"})
                     return
@@ -261,10 +329,41 @@ class HttpFrontend:
                 writer.close()
                 await writer.wait_closed()
 
+    def _health(self) -> Tuple[int, Dict]:
+        """Health snapshot (DESIGN.md §17).  Reads engine counters
+        directly (benign racy reads — scalars under the GIL) so health
+        stays answerable even when the pump is wedged, which is exactly
+        when an orchestrator needs the answer.  States: ``healthy`` |
+        ``overloaded`` (still 200 — serving, but shedding likely) |
+        ``draining`` | ``stuck`` (503 — take it out of rotation)."""
+        eng = self.server.engine
+        wd = eng.sc.watchdog_s
+        busy = bool(eng.waiting or eng.running)
+        stuck = wd > 0 and busy and \
+            (time.time() - eng.last_step_at) > wd
+        if self._draining:
+            state, status = "draining", 503
+        elif stuck:
+            state, status = "stuck", 503
+        elif len(eng.waiting) > 2 * max(1, eng.sc.max_batch):
+            state, status = "overloaded", 200
+        else:
+            state, status = "healthy", 200
+        return status, {"ok": status == 200, "state": state,
+                        "waiting": len(eng.waiting),
+                        "running": len(eng.running),
+                        "drained": self.drained,
+                        "watchdog_trips": eng.watchdog_trips}
+
     async def _route(self, method: str, path: str, body: Dict,
                      writer: asyncio.StreamWriter) -> None:
         if method == "GET" and path == "/healthz":
-            await self._respond(writer, 200, {"ok": True})
+            status, doc = self._health()
+            await self._respond(writer, status, doc)
+        elif method == "POST" and path == "/v1/drain":
+            self.begin_drain()
+            await self._respond(writer, 200,
+                                {"draining": True, "drained": self.drained})
         elif method == "GET" and path == "/v1/metrics":
             m = await self._call(self.server.metrics)
             m["http_sessions"] = len(self._sessions)
@@ -294,8 +393,23 @@ class HttpFrontend:
         self._streams[handle.rid] = _Stream(handle, aq,
                                             self._loop)  # type: ignore
 
+    async def _refuse_if_draining(self,
+                                  writer: asyncio.StreamWriter) -> bool:
+        """Drain guard for work-submitting endpoints: 503 + Retry-After
+        so well-behaved clients fail over to another replica instead of
+        queueing behind a server that will never admit them."""
+        if self._draining:
+            await self._respond(writer, 503,
+                                {"error": "server is draining",
+                                 "finish_reason": "draining"},
+                                extra_headers={"Retry-After": "1"})
+            return True
+        return False
+
     async def _completion(self, body: Dict,
                           writer: asyncio.StreamWriter) -> None:
+        if await self._refuse_if_draining(writer):
+            return
         prompt = body.get("prompt")
         if not isinstance(prompt, list) or \
                 not all(isinstance(t, int) for t in prompt):
@@ -323,6 +437,8 @@ class HttpFrontend:
 
     async def _create_session(self, body: Dict,
                               writer: asyncio.StreamWriter) -> None:
+        if await self._refuse_if_draining(writer):
+            return
         context = body.get("context")
         if not isinstance(context, list) or \
                 not all(isinstance(t, int) for t in context):
@@ -350,6 +466,8 @@ class HttpFrontend:
 
     async def _fork(self, sid: str, body: Dict,
                     writer: asyncio.StreamWriter) -> None:
+        if await self._refuse_if_draining(writer):
+            return
         sess = self._sessions.get(sid)
         if sess is None or not sess.alive:
             await self._respond(writer, 404,
@@ -452,6 +570,7 @@ class HttpFrontend:
                        ) -> None:
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
                   408: "Request Timeout", 429: "Too Many Requests",
+                  500: "Internal Server Error",
                   503: "Service Unavailable",
                   504: "Gateway Timeout"}.get(status, "Error")
         body = json.dumps(payload, default=str).encode()
@@ -471,11 +590,58 @@ class HttpFrontend:
 class ForkClient:
     """Minimal stdlib client for :class:`HttpFrontend` (tests + smoke +
     examples).  One connection per call — the server closes after each
-    response."""
+    response.
+
+    ``max_retries > 0`` turns on transient-failure retry for the
+    non-streaming endpoints (``completion`` / ``fork`` /
+    ``create_session``): a 429 or 503 is retried after a jittered
+    exponential backoff, with a ``Retry-After`` header (the server's
+    deterministic hint) overriding the computed delay when longer.
+    Streams are never retried — tokens may already have been consumed.
+    The attempt count is surfaced as ``client_retries`` in the returned
+    document (or ``HttpError.retries`` on final failure)."""
+
+    RETRYABLE = (429, 503)
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8080,
-                 timeout: float = 120.0):
+                 timeout: float = 120.0, max_retries: int = 0,
+                 backoff_s: float = 0.25, backoff_cap_s: float = 4.0,
+                 retry_seed: int = 0):
         self.host, self.port, self.timeout = host, port, timeout
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self._rng = random.Random(retry_seed)
+
+    def _retry_delay(self, attempt: int, headers: Dict[str, str]) -> float:
+        base = min(self.backoff_cap_s, self.backoff_s * (2 ** attempt))
+        # full-jitter-lite: [0.5, 1.0) x base decorrelates a thundering
+        # herd of clients while keeping the delay seed-deterministic
+        delay = base * (0.5 + self._rng.random() / 2)
+        ra = headers.get("retry-after")
+        if ra:
+            try:
+                delay = max(delay, float(ra))
+            except ValueError:
+                pass
+        return delay
+
+    def _with_retry(self, call: Callable[[], Dict]) -> Dict:
+        """Run ``call`` with up to ``max_retries`` retries on 429/503."""
+        attempt = 0
+        while True:
+            try:
+                doc = call()
+                if isinstance(doc, dict):
+                    doc["client_retries"] = attempt
+                return doc
+            except HttpError as exc:
+                if exc.status not in self.RETRYABLE or \
+                        attempt >= self.max_retries:
+                    exc.retries = attempt
+                    raise
+                time.sleep(self._retry_delay(attempt, exc.headers))
+                attempt += 1
 
     # ------------------------------------------------------------- plumbing
     def _request(self, method: str, path: str,
@@ -536,33 +702,46 @@ class ForkClient:
             raise HttpError(status, doc, {})
         return doc
 
+    def drain(self) -> Dict:
+        status, _, doc = self._request("POST", "/v1/drain")
+        if status != 200:
+            raise HttpError(status, doc, {})
+        return doc
+
     def completion(self, prompt: List[int], **kw) -> Dict:
         """Non-streaming completion; returns the final document.  Raises
-        :class:`HttpError` for refused requests (429/400/503/504)."""
-        status, headers, doc = self._request(
-            "POST", "/v1/completions", {"prompt": prompt, **kw})
-        if status != 200:
-            raise HttpError(status, doc, headers)
-        return doc
+        :class:`HttpError` for refused requests (429/400/500/503/504)
+        after exhausting ``max_retries`` on the retryable ones."""
+        def call() -> Dict:
+            status, headers, doc = self._request(
+                "POST", "/v1/completions", {"prompt": prompt, **kw})
+            if status != 200:
+                raise HttpError(status, doc, headers)
+            return doc
+        return self._with_retry(call)
 
     def stream_completion(self, prompt: List[int], **kw) -> Iterator[Dict]:
         return self._stream("POST", "/v1/completions",
                             {"prompt": prompt, "stream": True, **kw})
 
     def create_session(self, context: List[int], **kw) -> str:
-        status, _, doc = self._request("POST", "/v1/sessions",
-                                       {"context": context, **kw})
-        if status != 200:
-            raise HttpError(status, doc, {})
-        return doc["session_id"]
+        def call() -> Dict:
+            status, headers, doc = self._request(
+                "POST", "/v1/sessions", {"context": context, **kw})
+            if status != 200:
+                raise HttpError(status, doc, headers)
+            return doc
+        return self._with_retry(call)["session_id"]
 
     def fork(self, session_id: str, instruction: List[int], **kw) -> Dict:
-        status, headers, doc = self._request(
-            "POST", f"/v1/sessions/{session_id}/fork",
-            {"instruction": instruction, **kw})
-        if status != 200:
-            raise HttpError(status, doc, headers)
-        return doc
+        def call() -> Dict:
+            status, headers, doc = self._request(
+                "POST", f"/v1/sessions/{session_id}/fork",
+                {"instruction": instruction, **kw})
+            if status != 200:
+                raise HttpError(status, doc, headers)
+            return doc
+        return self._with_retry(call)
 
     def stream_fork(self, session_id: str, instruction: List[int],
                     **kw) -> Iterator[Dict]:
@@ -586,3 +765,4 @@ class HttpError(RuntimeError):
         self.status = status
         self.doc = doc
         self.headers = headers
+        self.retries = 0        # attempts the client burned before giving up

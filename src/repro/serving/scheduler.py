@@ -167,7 +167,9 @@ class IterationScheduler:
                 continue
             if used >= budget:
                 break
-            remainder = len(r.prompt) - r.prefill_pos
+            # ptoks, not prompt: a restored request (DESIGN.md §17)
+            # re-prefills its generated suffix like prompt tokens
+            remainder = len(r.ptoks) - r.prefill_pos
             chunk = min(remainder, budget - used,
                         self.sc.max_prefill_tokens)
             if chunk <= 0:

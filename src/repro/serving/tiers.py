@@ -193,6 +193,7 @@ class TieredPagePool:
         self.dropped_device_pages = 0  # device pages lost to host-LRU cascade
         self.demote_failures = 0
         self.promote_failures = 0
+        self.io_errors = 0            # export/import raised (DESIGN.md §17)
 
     def bind(self, export_fn: Callable, import_fn: Callable,
              pressure_fn: Optional[Callable[[int], int]] = None) -> None:
@@ -306,7 +307,16 @@ class TieredPagePool:
                     len(pages) * self._page_nbytes):
                 self.demote_failures += 1
                 return False
-            blobs = self.export_fn(pages)
+            try:
+                blobs = self.export_fn(pages)
+            except Exception:
+                # IO fault (DESIGN.md §17): nothing was moved — the node
+                # keeps its device pages and the caller falls back to
+                # true eviction, so a flaky export degrades to the seed's
+                # destroy-on-evict instead of crashing the pump
+                self.io_errors += 1
+                self.demote_failures += 1
+                return False
             self._page_nbytes = blob_bytes(blobs[0])
             if not self.host.can_admit(sum(blob_bytes(b) for b in blobs)):
                 # the node cannot fit (budget too small, or the remainder
@@ -364,7 +374,17 @@ class TieredPagePool:
             self.promote_failures += 1
             return False
         blobs = [self.host.get(h) for h in handles]
-        self.import_fn(pages, blobs)
+        try:
+            self.import_fn(pages, blobs)
+        except Exception:
+            # IO fault: give back the device pages just allocated; the
+            # host entries are untouched, so the node stays a valid
+            # host-tier node and the match truncates (partial hit) —
+            # the request recomputes the suffix instead of dying
+            self.pool.decref(pages)
+            self.io_errors += 1
+            self.promote_failures += 1
+            return False
         for h in handles:
             self._node_of.pop(h, None)
             self.host.free(h)
@@ -427,4 +447,5 @@ class TieredPagePool:
             "dropped_device_pages": self.dropped_device_pages,
             "demote_failures": self.demote_failures,
             "promote_failures": self.promote_failures,
+            "tier_io_errors": self.io_errors,
         }

@@ -1,0 +1,168 @@
+"""Chaos suite (DESIGN.md §17): hypothesis-generated fault schedules
+over fork/append/preempt/restore/quarantine/drain interleavings against
+a real tiny engine.
+
+The oracle extends ``test_radix_fuzz``'s leak discipline to the full
+serving stack: whatever faults fire and wherever a drain cuts in,
+
+  * every submitted request reaches a terminal ``finish_reason``;
+  * after drain completes the engine reports ``drained`` and — once the
+    trees release their refs — both device pools reclaim every page
+    except the reserved dump page (zero page leaks);
+  * error isolation holds: non-injected co-requests finish ``stop`` /
+    ``length`` / scheduler-refused reasons, never a crash;
+  * metrics stay coherent (counters match the faults that fired).
+
+Optional-dep-guarded like test_radix_fuzz: the deterministic fallback
+schedules below run even without hypothesis.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.api import ForkServer, SamplingParams
+
+TERMINAL = {"stop", "length", "rejected", "stalled", "timeout", "error",
+            "draining"}
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=16)
+    return cfg, params, lora
+
+
+def run_schedule(model, plan, seed, req_specs, drain_after, max_pages=12):
+    """Drive one fault schedule to quiescence and check the invariants.
+
+    ``req_specs``: list of (prompt_len, max_new, adapter) tuples;
+    ``drain_after``: poll count after which drain() is called (None =
+    never).  Small pool + preempt_after_steps=1 keeps preempt–restore in
+    play on most schedules."""
+    cfg, params, lora = model
+    sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=4,
+                     max_prefill_tokens=64, mode="forkkv",
+                     max_pages_per_req=8, preempt_after_steps=1,
+                     fault_plan=plan, fault_seed=seed)
+    server = ForkServer(cfg, params, lora, sc)
+    eng = server.engine
+    rng = np.random.default_rng(seed)
+    handles = []
+    for i, (plen, max_new, aid) in enumerate(req_specs):
+        prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, plen)]
+        handles.append(server.generate(
+            aid, prompt, SamplingParams(max_new_tokens=max_new)))
+    polls = 0
+    while eng.waiting or eng.running:
+        if drain_after is not None and polls == drain_after:
+            server.drain()
+        server.poll()
+        polls += 1
+        assert polls < 2000, "schedule failed to quiesce"
+
+    # 1. every request reached a terminal state
+    for h in handles:
+        out = h.result()
+        assert out.finish_reason in TERMINAL, out.finish_reason
+        # non-injected failure reasons only ever come from the scheduler
+        if out.finish_reason == "error":
+            assert out.error, "error finish without a reason string"
+    if drain_after is not None:
+        assert eng.drained
+
+    # 2. zero page leaks once the trees let go (dump page stays reserved)
+    eng.dual.base.evict(eng.sc.max_pages)
+    eng.dual.residual.evict(eng.res_pool.num_pages)
+    assert eng.base_pool.free_pages == eng.sc.max_pages - 1, \
+        "base pool leaked pages"
+    assert eng.res_pool.free_pages == eng.res_pool.num_pages - 1, \
+        "residual pool leaked pages"
+
+    # 3. metrics coherence: counters only move when their fault fired
+    m = server.metrics()
+    fired = m["faults_fired"]
+    if m["quarantined"]:
+        assert fired.get("fault_nan_logits", 0) >= 1
+    if fired.get("fault_executor", 0):
+        assert m["exec_errors"] >= 1
+    assert m["restored_requests"] <= m["preempted_requests"]
+    assert m["fallback_gather_calls"] == 0
+    return m
+
+
+# ------------------------------------------------- deterministic fallback
+def test_chaos_deterministic_preempt_and_quarantine(model):
+    """One fixed schedule exercising preempt + quarantine + drain in a
+    single run — the no-hypothesis smoke version of the fuzz below."""
+    m = run_schedule(
+        model, plan="nan_logits:r3", seed=5,
+        req_specs=[(40, 12, 1), (40, 6, 2), (36, 6, 3), (38, 6, 4)],
+        drain_after=None, max_pages=10)
+    assert m["quarantined"] == 1
+
+
+def test_chaos_deterministic_drain_mid_flight(model):
+    m = run_schedule(
+        model, plan="", seed=6,
+        req_specs=[(40, 10, 1), (40, 10, 2), (40, 10, 3)],
+        drain_after=2, max_pages=10)
+    assert m["draining"] and m["drained"]
+
+
+def test_chaos_deterministic_executor_storm(model):
+    m = run_schedule(
+        model, plan="executor:c2,c5;pool_alloc:c5,c6", seed=7,
+        req_specs=[(40, 8, 1), (38, 8, 2), (36, 8, 3)],
+        drain_after=None, max_pages=12)
+    assert m["exec_errors"] >= 1
+
+
+# ------------------------------------------------------- hypothesis fuzz
+if HAVE_HYPOTHESIS:
+    sites = st.sampled_from(
+        ["pool_alloc", "nan_logits", "executor"])
+
+    @st.composite
+    def plans(draw):
+        """0–3 fault rules with early-ish cN triggers (late triggers
+        never fire on short schedules) and the occasional rN poisoning
+        a specific request."""
+        rules = []
+        for site in draw(st.lists(sites, max_size=3, unique=True)):
+            trigs = draw(st.lists(
+                st.integers(1, 15).map(lambda n: f"c{n}"),
+                min_size=1, max_size=2))
+            if site == "nan_logits" and draw(st.booleans()):
+                trigs = [f"r{draw(st.integers(1, 4))}"]
+            rules.append(f"{site}:{','.join(trigs)}")
+        return ";".join(rules)
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(data=st.data())
+    def test_chaos_fault_schedule_fuzz(model, data):
+        plan = data.draw(plans(), label="plan")
+        seed = data.draw(st.integers(0, 99), label="seed")
+        n_req = data.draw(st.integers(2, 4), label="n_req")
+        req_specs = [
+            (data.draw(st.sampled_from([32, 36, 40]), label=f"plen{i}"),
+             data.draw(st.sampled_from([4, 6, 10]), label=f"new{i}"),
+             1 + i)
+            for i in range(n_req)]
+        drain_after = data.draw(
+            st.one_of(st.none(), st.integers(0, 6)), label="drain_after")
+        max_pages = data.draw(st.sampled_from([9, 12, 16]),
+                              label="max_pages")
+        run_schedule(model, plan, seed, req_specs, drain_after,
+                     max_pages=max_pages)

@@ -1,0 +1,387 @@
+"""Fault-tolerant serving gates (DESIGN.md §17).
+
+Acceptance gates for this layer:
+  * preempt–restore PARITY — a seeded fault plan forces >=1 preemption;
+    the victim's greedy tokens must be identical to an undisturbed run
+    in all three modes, with zero gather fallbacks;
+  * quarantine ISOLATION — an injected NaN on one request in a mixed
+    batch errors that request alone; co-batched requests finish with
+    undisturbed tokens and every page is reclaimed afterwards;
+  * graceful DRAIN — drain() refuses queued work terminally
+    (``finish_reason="draining"`` / HTTP 503) while in-flight requests
+    run to completion;
+  * executor ISOLATION — a raising step call fails the affected
+    requests terminally and the pump keeps serving;
+  * tier IO fallback — a failing device→host export degrades to true
+    eviction instead of crashing;
+  * stuck-pump WATCHDOG — an injected pump stall trips the frontend
+    watchdog counter.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.api import ForkServer, SamplingParams
+from repro.serving.faults import FaultInjector
+from repro.serving.frontend import ForkClient, HttpError, HttpFrontend
+from repro.serving.pool import PagePool
+from repro.serving.radix import RadixTree
+from repro.serving.tiers import HostTier, TieredPagePool
+
+MODES = ["forkkv", "prefix", "full_reuse"]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=16)
+    return cfg, params, lora
+
+
+def make_server(model, **kw):
+    cfg, params, lora = model
+    base = dict(page_size=16, max_pages=256, max_batch=4,
+                max_prefill_tokens=64, mode="forkkv", max_pages_per_req=12)
+    base.update(kw)
+    return ForkServer(cfg, params, lora, ServeConfig(**base)), cfg
+
+
+def prompt_tokens(cfg, n, seed=0):
+    return [int(t) for t in
+            np.random.default_rng(seed).integers(0, cfg.vocab_size, n)]
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("mode", MODES)
+def test_preempt_restore_token_parity(model, mode):
+    """THE §17 gate: a seeded fault plan denies the second request's
+    page allocations until the preempt trigger fires, checkpointing the
+    first request into the radix tree mid-decode; once restored, its
+    greedy tokens must be identical to an undisturbed run."""
+    cfg = model[0]
+    p1 = prompt_tokens(cfg, 40, seed=21)
+    p2 = prompt_tokens(cfg, 40, seed=22)
+
+    undisturbed, _ = make_server(model, mode=mode)
+    ref = [o.tokens for o in undisturbed.wait(
+        [undisturbed.generate(1, p1, SamplingParams(max_new_tokens=16)),
+         undisturbed.generate(2, p2, SamplingParams(max_new_tokens=8))])]
+
+    # forkkv admission allocates from BOTH pools (base then residual);
+    # fail the 8 pool_alloc calls after the first request's so the
+    # second stays blocked long past preempt_after_steps
+    pre = 2 if mode == "forkkv" else 1
+    plan = "pool_alloc:" + ",".join(f"c{pre + i + 1}" for i in range(8))
+    server, _ = make_server(model, mode=mode, fault_plan=plan,
+                            preempt_after_steps=2)
+    h1 = server.generate(1, p1, SamplingParams(max_new_tokens=16))
+    h2 = server.generate(2, p2, SamplingParams(max_new_tokens=8))
+    outs = server.wait([h1, h2])
+
+    m = server.metrics()
+    assert m["preempted_requests"] >= 1, m["faults_fired"]
+    assert m["restored_requests"] >= 1
+    assert m["faults_fired"]["fault_pool_alloc"] >= 2
+    assert outs[0].finish_reason == "length" and \
+        outs[1].finish_reason == "length"
+    assert outs[0].tokens == ref[0], "victim tokens diverged after restore"
+    assert outs[1].tokens == ref[1]
+    assert m["fallback_gather_calls"] == 0
+
+
+def test_preempt_restore_under_real_pressure(model):
+    """Same gate without injection: a pool too small for both requests
+    forces a real preemption, and the restore path re-prefills only the
+    uncovered suffix (recompute_tokens accounting is exact-bounded)."""
+    cfg = model[0]
+    p1 = prompt_tokens(cfg, 40, seed=31)
+    p2 = prompt_tokens(cfg, 40, seed=32)
+
+    undisturbed, _ = make_server(model, mode="forkkv")
+    ref = [o.tokens for o in undisturbed.wait(
+        [undisturbed.generate(1, p1, SamplingParams(max_new_tokens=24)),
+         undisturbed.generate(2, p2, SamplingParams(max_new_tokens=8))])]
+
+    # 7 pages total - 1 dump: r1 takes 4 (40+24 tokens), leaving 2 < the
+    # 3 r2 needs -> r2 blocks, preempt trigger fires
+    server, _ = make_server(model, mode="forkkv", max_pages=7,
+                            preempt_after_steps=1)
+    h1 = server.generate(1, p1, SamplingParams(max_new_tokens=24))
+    h2 = server.generate(2, p2, SamplingParams(max_new_tokens=8))
+    outs = server.wait([h1, h2])
+    m = server.metrics()
+    assert m["preempted_requests"] >= 1
+    assert m["restored_requests"] >= 1
+    assert outs[0].tokens == ref[0]
+    assert outs[1].tokens == ref[1]
+    assert m["fallback_gather_calls"] == 0
+
+
+# ------------------------------------------------------------ quarantine
+def test_quarantine_isolates_one_row(model):
+    """Injected NaN on one request in a mixed batch: that request alone
+    finishes ``finish_reason="error"``; its co-batched peers finish with
+    undisturbed tokens; every page is reclaimed afterwards."""
+    cfg = model[0]
+    prompts = [prompt_tokens(cfg, 36 + 2 * i, seed=40 + i)
+               for i in range(3)]
+
+    undisturbed, _ = make_server(model)
+    ref = [o.tokens for o in undisturbed.wait(
+        [undisturbed.generate(1 + i, p, SamplingParams(max_new_tokens=6))
+         for i, p in enumerate(prompts)])]
+
+    # rids are assigned 1.. in generate() order: poison request 2 only
+    server, _ = make_server(model, fault_plan="nan_logits:r2")
+    handles = [server.generate(1 + i, p, SamplingParams(max_new_tokens=6))
+               for i, p in enumerate(prompts)]
+    outs = server.wait(handles)
+
+    assert outs[1].finish_reason == "error"
+    assert "quarantined" in outs[1].error
+    assert outs[0].finish_reason == "length" and outs[0].tokens == ref[0]
+    assert outs[2].finish_reason == "length" and outs[2].tokens == ref[2]
+    m = server.metrics()
+    assert m["quarantined"] == 1
+    assert m["fallback_gather_calls"] == 0
+
+    # full page reclamation: drop every tree ref — all device pages must
+    # come back except the reserved dump page in each pool
+    eng = server.engine
+    eng.dual.base.evict(eng.sc.max_pages)
+    eng.dual.residual.evict(eng.res_pool.num_pages)
+    assert eng.base_pool.free_pages == eng.sc.max_pages - 1
+    assert eng.res_pool.free_pages == eng.res_pool.num_pages - 1
+
+
+def test_quarantine_in_phase_separated_loop(model):
+    """The isfinite guard rides the legacy decode/prefill paths too."""
+    cfg = model[0]
+    prompts = [prompt_tokens(cfg, 32, seed=51),
+               prompt_tokens(cfg, 34, seed=52)]
+    server, _ = make_server(model, mixed_batching=False,
+                            fault_plan="nan_logits:r1")
+    handles = [server.generate(1 + i, p, SamplingParams(max_new_tokens=5))
+               for i, p in enumerate(prompts)]
+    outs = server.wait(handles)
+    assert outs[0].finish_reason == "error"
+    assert outs[1].finish_reason == "length" and len(outs[1].tokens) == 5
+    assert server.metrics()["quarantined"] == 1
+
+
+# ----------------------------------------------------------------- drain
+def test_engine_drain_refuses_queued_finishes_inflight(model):
+    cfg = model[0]
+    server, _ = make_server(model, max_batch=1)
+    eng = server.engine
+    h1 = server.generate(1, prompt_tokens(cfg, 40, seed=61),
+                         SamplingParams(max_new_tokens=6))
+    # admit + start h1 (batch slot 1), then drain with h2 still queued
+    server.poll()
+    h2 = server.generate(2, prompt_tokens(cfg, 40, seed=62),
+                         SamplingParams(max_new_tokens=6))
+    server.drain()
+    outs = server.wait([h1, h2])
+    assert outs[0].finish_reason == "length" and len(outs[0].tokens) == 6
+    assert outs[1].finish_reason == "draining"
+    assert server.drained
+    m = server.metrics()
+    assert m["draining"] and m["drained"]
+
+
+def test_http_drain_503_and_inflight_completion(model):
+    """HTTP drain gate: POST /v1/drain while a stream is mid-flight —
+    the stream finishes normally, new requests get 503 + Retry-After,
+    /healthz flips to draining (503), and the frontend reports drained."""
+    server, cfg = make_server(model)
+    fe = HttpFrontend(server).start_background()
+    client = ForkClient(port=fe.port)
+    prompt = prompt_tokens(cfg, 40, seed=71)
+    try:
+        stream = client.stream_completion(prompt, max_new_tokens=8)
+        first = next(stream)            # in flight: >=1 token delivered
+        assert not first.get("finished")
+        assert client.drain()["draining"]
+        with pytest.raises(HttpError) as ei:
+            client.completion(prompt[:32], max_new_tokens=4)
+        assert ei.value.status == 503
+        assert float(ei.value.headers["retry-after"]) >= 1.0
+        events = [first] + list(stream)
+        assert events[-1]["finished"]
+        assert events[-1]["finish_reason"] == "length"
+        assert len(events[-1]["tokens"]) == 8
+        status, _, doc = client._request("GET", "/healthz")
+        assert status == 503 and doc["state"] == "draining"
+        deadline = time.time() + 10
+        while not fe.drained and time.time() < deadline:
+            time.sleep(0.02)
+        assert fe.drained
+    finally:
+        fe.shutdown()
+
+
+def test_client_retry_backoff_on_503(model):
+    """ForkClient retry satellite: 503s from a draining server are
+    retried with jittered exponential backoff honoring Retry-After,
+    then surfaced with the attempt count; a healthy server reports
+    ``client_retries == 0``."""
+    server, cfg = make_server(model)
+    fe = HttpFrontend(server).start_background()
+    prompt = prompt_tokens(cfg, 32, seed=81)
+    try:
+        ok_client = ForkClient(port=fe.port, max_retries=2)
+        doc = ok_client.completion(prompt, max_new_tokens=4)
+        assert doc["client_retries"] == 0 and len(doc["tokens"]) == 4
+
+        fe.begin_drain()
+        t0 = time.time()
+        client = ForkClient(port=fe.port, max_retries=1, backoff_s=0.05)
+        with pytest.raises(HttpError) as ei:
+            client.completion(prompt[:24], max_new_tokens=4)
+        assert ei.value.status == 503
+        assert ei.value.retries == 1
+        # Retry-After: 1 dominates the 0.05s backoff base
+        assert time.time() - t0 >= 1.0
+    finally:
+        fe.shutdown()
+
+
+def test_client_retry_delay_honors_retry_after():
+    c = ForkClient(max_retries=3, backoff_s=0.25, backoff_cap_s=4.0,
+                   retry_seed=7)
+    d0 = c._retry_delay(0, {})
+    assert 0.125 <= d0 < 0.25
+    assert c._retry_delay(0, {"retry-after": "2.5"}) >= 2.5
+    assert c._retry_delay(10, {}) <= 4.0      # capped
+
+
+# ---------------------------------------------------- executor isolation
+def test_executor_exception_fails_batch_not_pump(model):
+    cfg = model[0]
+    server, _ = make_server(model, fault_plan="executor:c3")
+    h1 = server.generate(1, prompt_tokens(cfg, 40, seed=91),
+                         SamplingParams(max_new_tokens=12))
+    out1 = h1.result()
+    assert out1.finish_reason == "error"
+    assert "injected fault" in out1.error
+    # the pump survives: a fresh request completes normally
+    h2 = server.generate(2, prompt_tokens(cfg, 40, seed=92),
+                         SamplingParams(max_new_tokens=4))
+    out2 = h2.result()
+    assert out2.finish_reason == "length" and len(out2.tokens) == 4
+    m = server.metrics()
+    assert m["exec_errors"] == 1
+    assert m["faults_fired"]["fault_executor"] == 1
+
+
+# ------------------------------------------------------ tier IO fallback
+def test_tier_demote_io_error_falls_back_to_eviction():
+    """A failing device→host export must degrade to the seed's
+    destroy-on-evict: pages reclaimed, io_error counted, no crash."""
+    host = HostTier(1 << 20)
+    pool = TieredPagePool(PagePool(8, 4, "base"), host)
+
+    def boom(pages):
+        raise RuntimeError("injected export failure")
+
+    pool.bind(export_fn=boom, import_fn=lambda p, b: None)
+    tree = RadixTree(pool)
+    pages = pool.alloc(2)
+    tree.insert([1, 2, 3, 4, 5, 6, 7, 8], pages)
+    pool.decref(pages)
+    freed = tree.evict(2)
+    assert freed == 2
+    assert pool.stats()["tier_io_errors"] == 1
+    assert pool.free_pages == 8
+    assert host.used_bytes == 0
+
+
+def test_tier_promote_io_error_keeps_host_node():
+    """A failing host→device import leaves the node a valid host-tier
+    node (the match truncates; the request recomputes the suffix)."""
+    host = HostTier(1 << 20)
+    pool = TieredPagePool(PagePool(8, 4, "base"), host)
+    calls = {"n": 0}
+
+    def export_fn(pages):
+        return [{"d": np.zeros(4)} for _ in pages]
+
+    def import_fn(pages, blobs):
+        calls["n"] += 1
+        raise RuntimeError("injected import failure")
+
+    pool.bind(export_fn=export_fn, import_fn=import_fn)
+    tree = RadixTree(pool)
+    pages = pool.alloc(2)
+    tree.insert([1, 2, 3, 4, 5, 6, 7, 8], pages)
+    pool.decref(pages)
+    assert tree.evict(2) == 2                  # demoted to host
+    matched_pages, matched, _ = tree.match_prefix(
+        [1, 2, 3, 4, 5, 6, 7, 8])
+    assert calls["n"] == 1
+    assert matched_pages == [] and matched == 0   # truncated, not crashed
+    assert pool.stats()["tier_io_errors"] == 1
+    assert host.used_bytes > 0                 # host copy survives
+
+
+def test_engine_tier_fault_sites_wired(model):
+    """tier_demote fires through the engine's bound export path and is
+    isolated: the run completes, tier_io_errors lands in metrics."""
+    cfg = model[0]
+    server, _ = make_server(model, max_pages=10, host_tier_bytes=1 << 22,
+                            fault_plan="tier_demote:c1")
+    # distinct prompts so eviction pressure actually demotes
+    for i in range(4):
+        out = server.generate(
+            1 + i, prompt_tokens(cfg, 48, seed=100 + i),
+            SamplingParams(max_new_tokens=4)).result()
+        assert out.finish_reason == "length"
+    m = server.metrics()
+    if m["faults_fired"].get("fault_tier_demote", 0):
+        assert m["tier_io_errors"] >= 1
+
+
+# -------------------------------------------------------------- watchdog
+def test_watchdog_trips_on_injected_stall(model):
+    server, cfg = make_server(model, fault_plan="pump_stall:c2,c3",
+                              watchdog_s=0.05)
+    server.engine.faults.stall_s = 0.3
+    fe = HttpFrontend(server).start_background()
+    client = ForkClient(port=fe.port)
+    try:
+        doc = client.completion(prompt_tokens(cfg, 40, seed=111),
+                                max_new_tokens=8)
+        assert len(doc["tokens"]) == 8       # stall delays, never corrupts
+        assert client.metrics()["watchdog_trips"] >= 1
+        assert client.healthz()              # recovered: healthy again
+    finally:
+        fe.shutdown()
+
+
+def test_fault_plan_grammar():
+    fi = FaultInjector("pool_alloc:c2,c4;nan_logits:r9;executor:*", seed=1)
+    assert fi.active
+    assert [fi.fire("pool_alloc") for _ in range(5)] == \
+        [False, True, False, True, False]
+    assert not fi.fire("nan_logits", key=8)
+    assert fi.fire("nan_logits", key=9)
+    assert fi.fire("executor") and fi.fire("executor")
+    assert fi.stats() == {"fault_pool_alloc": 2, "fault_nan_logits": 1,
+                          "fault_executor": 2}
+    with pytest.raises(ValueError):
+        FaultInjector("bogus_site:c1")
+    with pytest.raises(ValueError):
+        FaultInjector("pool_alloc:x9").fire("pool_alloc")
+    # probabilistic triggers are seed-deterministic
+    a = [FaultInjector("pool_alloc:p0.5", seed=3).fire("pool_alloc")
+         for _ in range(1)]
+    b = [FaultInjector("pool_alloc:p0.5", seed=3).fire("pool_alloc")
+         for _ in range(1)]
+    assert a == b

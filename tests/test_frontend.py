@@ -176,6 +176,45 @@ def test_bad_requests_are_4xx(frontend):
     assert ei.value.status == 404
 
 
+def test_malformed_json_body_is_400(frontend):
+    """Regression (§17 satellite): a syntactically broken JSON body must
+    come back 400 with an error document — not a 500 or a dropped
+    connection."""
+    import http.client
+    import json as json_mod
+    fe, _, _ = frontend
+    for raw in (b"{not json", b'{"prompt": [1,2,', b"\xff\xfe\x00"):
+        conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=30)
+        try:
+            conn.request("POST", "/v1/completions", body=raw,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            doc = json_mod.loads(resp.read())
+            assert resp.status == 400, raw
+            assert "error" in doc
+        finally:
+            conn.close()
+
+
+def test_unknown_sampling_keys_are_400(frontend):
+    """Regression (§17 satellite): a typoed sampling key is refused with
+    400 naming the key, instead of being silently dropped into greedy
+    defaults."""
+    _, client, cfg = frontend
+    prompt = prompt_tokens(cfg, 24, seed=13)
+    with pytest.raises(HttpError) as ei:
+        client.completion(prompt, max_new_tokens=4, temprature=0.7)
+    assert ei.value.status == 400
+    assert "temprature" in ei.value.doc["error"]
+    with pytest.raises(HttpError) as ei:
+        client.completion(prompt, max_new_tokens=4, top_K=5, banana=1)
+    assert ei.value.status == 400
+    # valid keys still pass
+    doc = client.completion(prompt, max_new_tokens=3, temperature=0.0,
+                            top_k=0, top_p=1.0, seed=0)
+    assert len(doc["tokens"]) == 3
+
+
 def test_fairshare_light_tenant_not_starved(model):
     """Acceptance (engine+HTTP integration): with fair share, a light
     tenant's request admitted behind a hog burst must not wait for the
