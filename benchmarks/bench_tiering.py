@@ -1,16 +1,29 @@
-"""Tiered KV offload benchmark (DESIGN.md §10).
+"""Tiered KV offload benchmark (DESIGN.md §10/§18).
 
 ReAct under device-memory pressure — the device page budget barely covers
 one request's footprint, so the seed engine's destroy-on-evict forces
-re-prefills.  Rows compare the tier disabled / enabled on the identical
-workload: ``prefilled_tokens`` drops and ``tier_hits`` appear when demoted
-pages are promoted instead of recomputed.
+re-prefills.  Three row groups on the identical workload:
+
+  * ``tier_off`` / ``tier_on`` — the original §10 comparison:
+    ``prefilled_tokens`` drops and ``tier_hits`` appear when demoted
+    pages are promoted instead of recomputed;
+  * ``codec_<name>`` — identity/int8/zstd on the demote path (§18): the
+    achieved ``compression_ratio`` (logical/stored host bytes) against
+    the tier hits the workload still gets;
+  * ``persist`` — persist the hot trees, build a FRESH server on the
+    same directory, restore, and re-run: ``restored_pages`` and the
+    warm run's prefill savings measure restart-rehydration.
+
+``--codec`` limits the codec sweep; ``--persist-dir`` reuses a directory
+across invocations (default: a throwaway temp dir per run).
 """
 from __future__ import annotations
 
+import argparse
+import tempfile
 import time
 
-from benchmarks.common import emit, run_workflow
+from benchmarks.common import build_server, emit, run_workflow
 
 # device budget of 26 pages vs a working set of ~6 live agent contexts;
 # rounds=2 lets each adapter re-fork its grown context (the reuse the
@@ -18,9 +31,10 @@ from benchmarks.common import emit, run_workflow
 _PRESSURE = dict(n_workflows=3, agents=2, rounds=2, context=256,
                  max_new=4, max_pages=26, max_pages_per_req=24,
                  max_batch=4, instr_len=16, tool_obs_len=24)
+_SERVER = dict(max_pages=26, max_pages_per_req=24, max_batch=4)
 
 
-def main() -> None:
+def _tier_rows() -> None:
     for label, host_bytes in (("off", 0), ("on", 64 << 20)):
         t0 = time.time()
         m = run_workflow("forkkv", "react", host_tier_bytes=host_bytes,
@@ -42,5 +56,65 @@ def main() -> None:
              f"{m['preemptions']}")
 
 
+def _codec_rows(codecs) -> None:
+    for codec in codecs:
+        t0 = time.time()
+        m = run_workflow("forkkv", "react", host_tier_bytes=64 << 20,
+                         kv_codec=codec, **_PRESSURE)
+        wall_us = (time.time() - t0) * 1e6
+        emit(f"tiering.react.codec_{codec}.compression_ratio", wall_us,
+             f"{m['compression_ratio']:.4f}")
+        emit(f"tiering.react.codec_{codec}.host_compressed_bytes", 0,
+             f"{m['host_compressed_bytes']}")
+        emit(f"tiering.react.codec_{codec}.codec_stored_bytes", 0,
+             f"{m['codec_stored_bytes']}")
+        emit(f"tiering.react.codec_{codec}.tier_hits", 0,
+             f"{m['tier_hits']}")
+        emit(f"tiering.react.codec_{codec}.prefill_saved_frac", 0,
+             f"{m['prefill_saved_frac']:.4f}")
+
+
+def _persist_rows(persist_dir: str) -> None:
+    common = dict(host_tier_bytes=64 << 20, persist_dir=persist_dir,
+                  kv_codec="zstd")
+    cold_server = build_server("forkkv", **_SERVER, **common)
+    t0 = time.time()
+    cold = run_workflow("forkkv", "react", server=cold_server, **_PRESSURE)
+    cold_us = (time.time() - t0) * 1e6
+    persisted = cold_server.engine.persist()
+    # a FRESH server on the same directory: rehydrate, then the identical
+    # workload — restored context serves as tier hits, not re-prefill
+    warm_server = build_server("forkkv", **_SERVER, **common)
+    restored = warm_server.engine.restore()
+    t0 = time.time()
+    warm = run_workflow("forkkv", "react", server=warm_server, **_PRESSURE)
+    warm_us = (time.time() - t0) * 1e6
+    emit("tiering.react.persist.pages_persisted", cold_us, f"{persisted}")
+    emit("tiering.react.persist.pages_restored", 0, f"{restored}")
+    emit("tiering.react.persist.cold_prefilled_tokens", cold_us,
+         f"{cold['prefilled_tokens']}")
+    emit("tiering.react.persist.warm_prefilled_tokens", warm_us,
+         f"{warm['prefilled_tokens']}")
+    emit("tiering.react.persist.warm_tier_hits", 0, f"{warm['tier_hits']}")
+    emit("tiering.react.persist.warm_prefill_saved_frac", 0,
+         f"{warm['prefill_saved_frac']:.4f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--codec", choices=["identity", "int8", "zstd", "all"],
+                    default="all", help="codec sweep selection")
+    ap.add_argument("--persist-dir", default="",
+                    help="persist/restore directory (default: temp dir)")
+    args = ap.parse_args([] if argv is None else argv)
+    _tier_rows()
+    codecs = (["identity", "int8", "zstd"] if args.codec == "all"
+              else [args.codec])
+    _codec_rows(codecs)
+    pdir = args.persist_dir or tempfile.mkdtemp(prefix="forkkv-bench-")
+    _persist_rows(pdir)
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

@@ -31,19 +31,41 @@ def get_tiny_model(rank: int = 8, n_adapters: int = 32):
     return _MODEL_CACHE[key]
 
 
+def build_server(mode: str, *, rank: int = 8, max_pages: int = 256,
+                 max_batch: int = 8, max_pages_per_req: int = 48,
+                 host_tier_bytes: int = 0, kv_codec: str = "identity",
+                 disk_tier_bytes: int = 0, persist_dir: str = ""):
+    """ForkServer with the full tiering surface (DESIGN.md §18) exposed —
+    codec, disk tier and persist dir — for benchmarks that restart the
+    server or sweep codecs."""
+    cfg, params, lora = get_tiny_model(rank=rank)
+    sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=max_batch,
+                     max_prefill_tokens=128, mode=mode,
+                     max_pages_per_req=max_pages_per_req,
+                     host_tier_bytes=host_tier_bytes, kv_codec=kv_codec,
+                     disk_tier_bytes=disk_tier_bytes,
+                     persist_dir=persist_dir)
+    return ForkServer(cfg, params, lora, sc)
+
+
 def run_workflow(mode: str, workflow: str = "react", *, rank: int = 8,
                  n_workflows: int = 2, agents: int = 3, context: int = 256,
                  max_new: int = 8, max_pages: int = 256,
                  max_batch: int = 8, seed: int = 0, rounds: int = 1,
                  max_pages_per_req: int = 48,
                  host_tier_bytes: int = 0, instr_len: int = 24,
-                 tool_obs_len: int = 50) -> Dict:
-    cfg, params, lora = get_tiny_model(rank=rank)
-    sc = ServeConfig(page_size=16, max_pages=max_pages, max_batch=max_batch,
-                     max_prefill_tokens=128, mode=mode,
-                     max_pages_per_req=max_pages_per_req,
-                     host_tier_bytes=host_tier_bytes)
-    server = ForkServer(cfg, params, lora, sc)
+                 tool_obs_len: int = 50, kv_codec: str = "identity",
+                 disk_tier_bytes: int = 0, persist_dir: str = "",
+                 server=None) -> Dict:
+    cfg, _, _ = get_tiny_model(rank=rank)
+    if server is None:
+        server = build_server(mode, rank=rank, max_pages=max_pages,
+                              max_batch=max_batch,
+                              max_pages_per_req=max_pages_per_req,
+                              host_tier_bytes=host_tier_bytes,
+                              kv_codec=kv_codec,
+                              disk_tier_bytes=disk_tier_bytes,
+                              persist_dir=persist_dir)
     wf = WorkflowConfig(n_workflows=n_workflows, agents_per_workflow=agents,
                         shared_context_len=context, max_new_tokens=max_new,
                         vocab=cfg.vocab_size, seed=seed, rounds=rounds,

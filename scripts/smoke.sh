@@ -194,4 +194,76 @@ wait $HTTP_PID || DRAIN_RC=$?
 test "$DRAIN_RC" -eq 0 || {
   echo "drained server exited rc=$DRAIN_RC"; cat /tmp/forkkv_http.log; exit 1; }
 trap - EXIT
+
+echo "== KV persist/restore across restart (DESIGN.md §18) =="
+PERSIST_DIR=$(mktemp -d)
+start_persist_server() {
+  python -m repro.launch.serve --http --port 0 --max-pages 256 \
+    --persist-dir "$PERSIST_DIR" --kv-codec zstd \
+    > "$1" 2>&1 &
+  PERSIST_PID=$!
+  trap 'kill $PERSIST_PID 2>/dev/null || true' EXIT
+  for _ in $(seq 120); do
+    grep -q "on http://" "$1" && break
+    sleep 1
+  done
+  PERSIST_PORT=$(sed -n 's#.*on http://[^:]*:\([0-9]*\).*#\1#p' "$1")
+  test -n "$PERSIST_PORT" || { cat "$1"; exit 1; }
+}
+start_persist_server /tmp/forkkv_persist1.log
+HTTP_PORT="$PERSIST_PORT" PHASE=record python - <<'PY'
+import json
+import os
+
+import numpy as np
+
+from repro.serving.frontend import ForkClient
+
+client = ForkClient(port=int(os.environ["HTTP_PORT"]))
+rng = np.random.default_rng(7)
+ctx = [int(t) for t in rng.integers(0, 1000, 96)]
+sid = client.create_session(ctx, adapter_id=0)
+doc = client.fork(sid, ctx[:8], adapter_id=1, max_new_tokens=8)
+client.close_session(sid)
+assert len(doc["tokens"]) == 8, doc
+json.dump({"ctx": ctx, "tokens": doc["tokens"]},
+          open("/tmp/forkkv_persist_ref.json", "w"))
+print("recorded", len(doc["tokens"]), "tokens before shutdown")
+PY
+kill -TERM $PERSIST_PID
+wait $PERSIST_PID || { cat /tmp/forkkv_persist1.log; exit 1; }
+grep -q "persist: wrote" /tmp/forkkv_persist1.log || {
+  echo "server did not persist on shutdown"; cat /tmp/forkkv_persist1.log
+  exit 1; }
+test -s "$PERSIST_DIR/manifest.json" || {
+  echo "missing persist manifest"; ls -la "$PERSIST_DIR"; exit 1; }
+start_persist_server /tmp/forkkv_persist2.log
+grep -q "restore: rehydrated" /tmp/forkkv_persist2.log || {
+  echo "restarted server did not restore"; cat /tmp/forkkv_persist2.log
+  exit 1; }
+HTTP_PORT="$PERSIST_PORT" python - <<'PY'
+import json
+import os
+
+from repro.serving.frontend import ForkClient
+
+ref = json.load(open("/tmp/forkkv_persist_ref.json"))
+client = ForkClient(port=int(os.environ["HTTP_PORT"]))
+# the SAME shared context on the restarted server: rehydrated pages must
+# serve it as tier hits (no full re-prefill), and the forked greedy
+# continuation must be token-identical to the pre-restart run
+sid = client.create_session(ref["ctx"], adapter_id=0)
+doc = client.fork(sid, ref["ctx"][:8], adapter_id=1, max_new_tokens=8)
+client.close_session(sid)
+assert doc["tokens"] == ref["tokens"], (doc["tokens"], ref["tokens"])
+m = client.metrics()
+assert m["restored_pages"] > 0, "nothing was rehydrated"
+assert m["tier_hits"] > 0, "restored context was not promoted"
+assert m["hit_tokens"] > 0, "session prefill missed the restored prefix"
+print(f"persist/restore OK: {m['restored_pages']} pages rehydrated, "
+      f"tier_hits={m['tier_hits']}, tokens identical across restart")
+PY
+kill -TERM $PERSIST_PID
+wait $PERSIST_PID || { cat /tmp/forkkv_persist2.log; exit 1; }
+trap - EXIT
 echo "smoke OK"

@@ -264,6 +264,21 @@ class ServeConfig:
     # policy knob: max pages promoted host→device per prefix match
     # (0 = unlimited) — bounds the H2D copy burst a single admission pays.
     tier_promote_limit: int = 0
+    # blob codec applied on demote / reversed on promote (DESIGN.md §18):
+    # "identity" (bit-identical), "int8" (per-row-scale quantization,
+    # ~4x smaller host/disk footprint, bounded error), "zstd" (lossless
+    # compression; falls back to zlib when zstandard is not installed).
+    kv_codec: str = "identity"
+    # disk tier below the host tier: > 0 adds a file-backed third tier of
+    # this many bytes — host-LRU pressure SPILLS nodes to disk instead of
+    # destroying them, and matches promote disk-tier nodes straight back.
+    disk_tier_bytes: int = 0
+    # directory holding disk-tier blob files, and — when set — the
+    # persist()/restore() manifest: a server restarted with the same
+    # ``persist_dir`` rehydrates its radix trees from the manifest into
+    # the host tier instead of re-prefilling shared agent context.
+    # Empty with disk_tier_bytes > 0 uses a temp directory (non-persistent).
+    persist_dir: str = ""
     # stall detection: after this many consecutive engine steps with work
     # waiting but nothing admitted, prefilled, or decoded, the head waiting
     # request is failed with a ``stalled`` error instead of the engine

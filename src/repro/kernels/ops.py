@@ -88,6 +88,7 @@ def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
                              window: int = 0,
                              rope_theta: float = 10_000.0,
                              use_rope: bool = True,
+                             kb_scale=None, vb_scale=None,
                              backend: Optional[str] = None,
                              interpret: Optional[bool] = None) -> jnp.ndarray:
     """Decode attention over paged pools + block tables (DESIGN.md §12).
@@ -118,16 +119,17 @@ def paged_residual_attention(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
         return ref_mod.paged_residual_attention_ref(
             q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
             kv_len, scale=scale, window=window, rope_theta=rope_theta,
-            use_rope=use_rope)
+            use_rope=use_rope, kb_scale=kb_scale, vb_scale=vb_scale)
     interpret = _resolve_interpret(interpret)
     if kr_pool is None:
         return pra.paged_attention_decode_base(
             q, kb_pool, vb_pool, bt_b, kv_len, scale=scale, window=window,
-            interpret=interpret)
+            kb_scale=kb_scale, vb_scale=vb_scale, interpret=interpret)
     return pra.paged_residual_attention_decode(
         q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
         kv_len, scale=scale, window=window, rope_theta=rope_theta,
-        use_rope=use_rope, interpret=interpret)
+        use_rope=use_rope, kb_scale=kb_scale, vb_scale=vb_scale,
+        interpret=interpret)
 
 
 def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
@@ -136,6 +138,7 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                      window: int = 0,
                                      rope_theta: float = 10_000.0,
                                      use_rope: bool = True,
+                                     kb_scale=None, vb_scale=None,
                                      backend: Optional[str] = None,
                                      interpret: Optional[bool] = None
                                      ) -> jnp.ndarray:
@@ -158,16 +161,19 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
         return ref_mod.paged_residual_attention_prefill_ref(
             q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
             start, kv_len, scale=scale, window=window,
-            rope_theta=rope_theta, use_rope=use_rope)
+            rope_theta=rope_theta, use_rope=use_rope, kb_scale=kb_scale,
+            vb_scale=vb_scale)
     interpret = _resolve_interpret(interpret)
     if kr_pool is None:
         return pra.paged_attention_prefill_base(
             q, kb_pool, vb_pool, bt_b, start, kv_len, scale=scale,
-            window=window, interpret=interpret)
+            window=window, kb_scale=kb_scale, vb_scale=vb_scale,
+            interpret=interpret)
     return pra.paged_residual_attention_prefill(
         q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
         start, kv_len, scale=scale, window=window, rope_theta=rope_theta,
-        use_rope=use_rope, interpret=interpret)
+        use_rope=use_rope, kb_scale=kb_scale, vb_scale=vb_scale,
+        interpret=interpret)
 
 
 def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
@@ -176,6 +182,7 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                    window: int = 0,
                                    rope_theta: float = 10_000.0,
                                    use_rope: bool = True,
+                                   kb_scale=None, vb_scale=None,
                                    backend: Optional[str] = None,
                                    interpret: Optional[bool] = None
                                    ) -> jnp.ndarray:
@@ -195,13 +202,16 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
         return ref_mod.paged_residual_attention_mixed_ref(
             q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
             start, q_len, kv_len, scale=scale, window=window,
-            rope_theta=rope_theta, use_rope=use_rope)
+            rope_theta=rope_theta, use_rope=use_rope, kb_scale=kb_scale,
+            vb_scale=vb_scale)
     interpret = _resolve_interpret(interpret)
     if kr_pool is None:
         return pra.paged_attention_mixed_base(
             q, kb_pool, vb_pool, bt_b, start, q_len, kv_len, scale=scale,
-            window=window, interpret=interpret)
+            window=window, kb_scale=kb_scale, vb_scale=vb_scale,
+            interpret=interpret)
     return pra.paged_residual_attention_mixed(
         q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v, bt_b, bt_r,
         start, q_len, kv_len, scale=scale, window=window,
-        rope_theta=rope_theta, use_rope=use_rope, interpret=interpret)
+        rope_theta=rope_theta, use_rope=use_rope, kb_scale=kb_scale,
+        vb_scale=vb_scale, interpret=interpret)

@@ -77,13 +77,18 @@ def _first_window_page(qpos_min, page: int, window: int):
 
 
 def _reconstruct_k(kb_ref, kr_ref, bk_ref, j, *, page: int, d: int,
-                   rope_theta: float, use_rope: bool):
+                   rope_theta: float, use_rope: bool, ks_ref=None):
     """In-kernel K reconstruction with deferred RoPE — shared by the
     disaggregated decode and prefill kernel bodies so a numerics fix can
     never diverge the two paths: K = K_b + RoPE(K_r B_k), with RoPE
     computed from the logical position (j·page + offset), no sin/cos
-    tables in HBM.  Returns a (page, D) f32 tile."""
+    tables in HBM.  When ``ks_ref`` is given the bCache tile is int8 and
+    is dequantized in VMEM with its (page, 1) per-token scale before the
+    residual is folded in (DESIGN.md §18) — the residual stream stays
+    full precision.  Returns a (page, D) f32 tile."""
     k_b = kb_ref[0, :, 0, :].astype(jnp.float32)               # (page, D)
+    if ks_ref is not None:
+        k_b = k_b * ks_ref[0]                                  # (page, 1)
     k_r = kr_ref[0].astype(jnp.float32)                        # (page, R)
     b_k = bk_ref[0, 0].astype(jnp.float32)                     # (R, D)
     k_lora = jnp.dot(k_r, b_k, preferred_element_type=jnp.float32)
@@ -122,10 +127,19 @@ def _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b,
     l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
 
-def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
-            vr_ref, bk_ref, bv_ref, out_ref, m_scr, l_scr, acc_scr,
-            accr_scr, *, scale: float, page: int, window: int,
-            rope_theta: float, use_rope: bool):
+def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, *rest,
+            scale: float, page: int, window: int,
+            rope_theta: float, use_rope: bool, quant: bool = False):
+    # ``quant`` is a trace-time static: the int8 variant threads two extra
+    # scale operands right after the bCache tiles, so the ref list is
+    # unpacked per-variant instead of duplicating the whole body.
+    if quant:
+        (ks_ref, vs_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+    else:
+        (kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -151,15 +165,18 @@ def _kernel(bt_b_ref, bt_r_ref, kvlen_ref, q_ref, kb_ref, vb_ref, kr_ref,
     @pl.when(live)
     def _compute():
         k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
-                           rope_theta=rope_theta, use_rope=use_rope)
+                           rope_theta=rope_theta, use_rope=use_rope,
+                           ks_ref=ks_ref)
         q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         mask = kpos < kvlen
         if window > 0:
             mask = mask & (kpos > kvlen - 1 - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32),
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b,
                         accr_scr, vr_ref[0].astype(jnp.float32))
 
     @pl.when(j == nj - 1)
@@ -191,6 +208,7 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                     scale: float, window: int = 0,
                                     rope_theta: float = 10_000.0,
                                     use_rope: bool = True,
+                                    kb_scale=None, vb_scale=None,
                                     interpret: bool = True):
     """Decode over paged disaggregated caches.
 
@@ -200,13 +218,17 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
     b_k/b_v:  (B, R, Hkv*D)      per-request up-projections
     bt_b/bt_r:(B, n_pages) int32 block tables (logical page -> pool page)
     kv_len:   (B,) valid tokens; ``window > 0`` restricts attention to the
-    trailing ``window`` positions (SWA).  Returns (B, Hq, D).
+    trailing ``window`` positions (SWA).  ``kb_scale``/``vb_scale``
+    ((P, page, Hkv) f32, or None) mark the base pools as int8-quantized:
+    each page tile is dequantized in VMEM next to the running softmax
+    (DESIGN.md §18).  Returns (B, Hq, D).
     """
     bsz, hq, d = q.shape
     page, hkv = kb_pool.shape[1], kb_pool.shape[2]
     g = hq // hkv
     r = kr_pool.shape[-1]
     n_pages = bt_b.shape[1]
+    quant = kb_scale is not None
 
     qt = q.reshape(bsz, hkv, g, d)
     bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
@@ -214,31 +236,44 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
 
     kernel = functools.partial(_kernel, scale=scale, page=page,
                                window=window, rope_theta=rope_theta,
-                               use_rope=use_rope)
+                               use_rope=use_rope, quant=quant)
 
     clamp = _decode_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, btr, kvl):
         return (btb[b, clamp(j, kvl[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, btr, kvl):
+        return (btb[b, clamp(j, kvl[b])], 0, h)
+
     def _r_map(b, h, j, btb, btr, kvl):
         return (btr[b, clamp(j, kvl[b])], 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+    in_specs += [
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
+    ]
+    operands += [kr_pool, vr_pool, bkt, bvt]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda b, h, j, btb, btr, kvl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -254,17 +289,21 @@ def paged_residual_attention_decode(q, kb_pool, vb_pool, kr_pool, vr_pool,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
         interpret=interpret,
     )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qt, kb_pool, vb_pool, kr_pool, vr_pool,
-      bkt, bvt)
+      kv_len.astype(jnp.int32), *operands)
     return out.reshape(bsz, hq, d)
 
 
 # --------------------------------------------------------------------------
 # Base-only variant (unified caches / no-LoRA requests)
 # --------------------------------------------------------------------------
-def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
-                 m_scr, l_scr, acc_scr, *, scale: float, page: int,
-                 window: int):
+def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, *rest,
+                 scale: float, page: int, window: int,
+                 quant: bool = False):
+    if quant:
+        ks_ref, vs_ref, out_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        out_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -283,14 +322,18 @@ def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
     @pl.when(live)
     def _compute():
         k = kb_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
+        if ks_ref is not None:
+            k = k * ks_ref[0]
         q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         mask = kpos < kvlen
         if window > 0:
             mask = mask & (kpos > kvlen - 1 - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32))
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b)
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -301,6 +344,7 @@ def _kernel_base(bt_b_ref, kvlen_ref, q_ref, kb_ref, vb_ref, out_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
 def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
                                 scale: float, window: int = 0,
+                                kb_scale=None, vb_scale=None,
                                 interpret: bool = True):
     """Base-only paged decode: attention over the bCache pool alone.
 
@@ -309,30 +353,42 @@ def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
     minus the residual stream:
 
     q: (B, Hq, D); kb/vb: (P, page, Hkv, D); bt_b: (B, n_pages);
-    kv_len: (B,).  Returns (B, Hq, D).
+    kv_len: (B,); kb_scale/vb_scale: (P, page, Hkv) f32 int8 dequant
+    scales, or None.  Returns (B, Hq, D).
     """
     bsz, hq, d = q.shape
     page, hkv = kb_pool.shape[1], kb_pool.shape[2]
     g = hq // hkv
     n_pages = bt_b.shape[1]
+    quant = kb_scale is not None
     qt = q.reshape(bsz, hkv, g, d)
 
     kernel = functools.partial(_kernel_base, scale=scale, page=page,
-                               window=window)
+                               window=window, quant=quant)
     clamp = _decode_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, kvl):
         return (btb[b, clamp(j, kvl[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, kvl):
+        return (btb[b, clamp(j, kvl[b])], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b, h, j, btb, kvl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b, h, j, btb, kvl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda b, h, j, btb, kvl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -346,8 +402,7 @@ def paged_attention_decode_base(q, kb_pool, vb_pool, bt_b, kv_len, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32), qt, kb_pool,
-      vb_pool)
+    )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32), *operands)
     return out.reshape(bsz, hq, d)
 
 
@@ -367,9 +422,16 @@ def _prefill_page_clamp(page: int, window: int):
 
 
 def _kernel_prefill(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, q_ref, kb_ref,
-                    vb_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref, m_scr,
-                    l_scr, acc_scr, accr_scr, *, scale: float, page: int,
-                    window: int, rope_theta: float, use_rope: bool):
+                    vb_ref, *rest, scale: float, page: int,
+                    window: int, rope_theta: float, use_rope: bool,
+                    quant: bool = False):
+    if quant:
+        (ks_ref, vs_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+    else:
+        (kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -395,7 +457,8 @@ def _kernel_prefill(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, q_ref, kb_ref,
     @pl.when(live)
     def _compute():
         k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
-                           rope_theta=rope_theta, use_rope=use_rope)
+                           rope_theta=rope_theta, use_rope=use_rope,
+                           ks_ref=ks_ref)
         # causal chunk scores; the online softmax carries across page steps
         q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)   # (G*chunk, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
@@ -405,8 +468,10 @@ def _kernel_prefill(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, q_ref, kb_ref,
         mask = (kpos < kvlen) & (kpos <= rowpos)
         if window > 0:
             mask = mask & (kpos > rowpos - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32),
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b,
                         accr_scr, vr_ref[0].astype(jnp.float32))
 
     @pl.when(j == nj - 1)
@@ -425,6 +490,7 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                      scale: float, window: int = 0,
                                      rope_theta: float = 10_000.0,
                                      use_rope: bool = True,
+                                     kb_scale=None, vb_scale=None,
                                      interpret: bool = True):
     """Chunked prefill over paged disaggregated caches (DESIGN.md §13).
 
@@ -447,6 +513,7 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
     r = kr_pool.shape[-1]
     n_pages = bt_b.shape[1]
     rows = g * sq
+    quant = kb_scale is not None
 
     qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
     bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
@@ -454,30 +521,43 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
 
     kernel = functools.partial(_kernel_prefill, scale=scale, page=page,
                                window=window, rope_theta=rope_theta,
-                               use_rope=use_rope)
+                               use_rope=use_rope, quant=quant)
     clamp = _prefill_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, btr, kvl, st):
         return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, btr, kvl, st):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h)
+
     def _r_map(b, h, j, btb, btr, kvl, st):
         return (btr[b, clamp(j, kvl[b], st[b])], 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, sq, d),
+                     lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+    in_specs += [
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
+    ]
+    operands += [kr_pool, vr_pool, bkt, bvt]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, sq, d),
-                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, sq, d),
             lambda b, h, j, btb, btr, kvl, st: (b, h, 0, 0, 0)),
@@ -494,14 +574,18 @@ def paged_residual_attention_prefill(q, kb_pool, vb_pool, kr_pool, vr_pool,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
         interpret=interpret,
     )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
-      kv_len.astype(jnp.int32), start.astype(jnp.int32), qt, kb_pool,
-      vb_pool, kr_pool, vr_pool, bkt, bvt)
+      kv_len.astype(jnp.int32), start.astype(jnp.int32), *operands)
     return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
 
 
 def _kernel_prefill_base(bt_b_ref, kvlen_ref, start_ref, q_ref, kb_ref,
-                         vb_ref, out_ref, m_scr, l_scr, acc_scr, *,
-                         scale: float, page: int, window: int):
+                         vb_ref, *rest, scale: float, page: int,
+                         window: int, quant: bool = False):
+    if quant:
+        ks_ref, vs_ref, out_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        out_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -523,6 +607,8 @@ def _kernel_prefill_base(bt_b_ref, kvlen_ref, start_ref, q_ref, kb_ref,
     @pl.when(live)
     def _compute():
         k = kb_ref[0, :, 0, :].astype(jnp.float32)             # (page, D)
+        if ks_ref is not None:
+            k = k * ks_ref[0]
         q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         rowpos = start + jax.lax.broadcasted_iota(
@@ -531,8 +617,10 @@ def _kernel_prefill_base(bt_b_ref, kvlen_ref, start_ref, q_ref, kb_ref,
         mask = (kpos < kvlen) & (kpos <= rowpos)
         if window > 0:
             mask = mask & (kpos > rowpos - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32))
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b)
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -544,6 +632,7 @@ def _kernel_prefill_base(bt_b_ref, kvlen_ref, start_ref, q_ref, kb_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
 def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
                                  scale: float, window: int = 0,
+                                 kb_scale=None, vb_scale=None,
                                  interpret: bool = True):
     """Base-only chunked prefill: unified caches / no-LoRA requests, and
     the broadcast-fork base trajectory.  Shapes as the disaggregated
@@ -553,24 +642,35 @@ def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
     g = hq // hkv
     n_pages = bt_b.shape[1]
     rows = g * sq
+    quant = kb_scale is not None
     qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
 
     kernel = functools.partial(_kernel_prefill_base, scale=scale, page=page,
-                               window=window)
+                               window=window, quant=quant)
     clamp = _prefill_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, kvl, st):
         return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, kvl, st):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, sq, d),
+                     lambda b, h, j, btb, kvl, st: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, sq, d),
-                         lambda b, h, j, btb, kvl, st: (b, h, 0, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, sq, d),
             lambda b, h, j, btb, kvl, st: (b, h, 0, 0, 0)),
@@ -586,7 +686,7 @@ def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
         interpret=interpret,
     )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32),
-      start.astype(jnp.int32), qt, kb_pool, vb_pool)
+      start.astype(jnp.int32), *operands)
     return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
 
 
@@ -594,13 +694,19 @@ def paged_attention_prefill_base(q, kb_pool, vb_pool, bt_b, start, kv_len, *,
 # Unified mixed prefill/decode grid (DESIGN.md §14)
 # --------------------------------------------------------------------------
 def _kernel_mixed(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
-                  kb_ref, vb_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
-                  m_scr, l_scr, acc_scr, accr_scr, *, scale: float,
+                  kb_ref, vb_ref, *rest, scale: float,
                   page: int, window: int, rope_theta: float,
-                  use_rope: bool):
+                  use_rope: bool, quant: bool = False):
     """Prefill kernel body generalized with a per-row q-length: rows past
     ``q_len`` are masked everywhere and written out as zeros, and rows
     with ``q_len == 0`` (batch padding) skip every page's FLOPs."""
+    if quant:
+        (ks_ref, vs_ref, kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+    else:
+        (kr_ref, vr_ref, bk_ref, bv_ref, out_ref,
+         m_scr, l_scr, acc_scr, accr_scr) = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -624,7 +730,8 @@ def _kernel_mixed(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
     @pl.when(live)
     def _compute():
         k = _reconstruct_k(kb_ref, kr_ref, bk_ref, j, page=page, d=d,
-                           rope_theta=rope_theta, use_rope=use_rope)
+                           rope_theta=rope_theta, use_rope=use_rope,
+                           ks_ref=ks_ref)
         q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         rowidx = jax.lax.broadcasted_iota(
@@ -634,8 +741,10 @@ def _kernel_mixed(bt_b_ref, bt_r_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
         mask = (kpos < kvlen) & (kpos <= rowpos) & (rowidx < qlen)
         if window > 0:
             mask = mask & (kpos > rowpos - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32),
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b,
                         accr_scr, vr_ref[0].astype(jnp.float32))
 
     @pl.when(j == nj - 1)
@@ -657,6 +766,7 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                    kv_len, *, scale: float, window: int = 0,
                                    rope_theta: float = 10_000.0,
                                    use_rope: bool = True,
+                                   kb_scale=None, vb_scale=None,
                                    interpret: bool = True):
     """Unified mixed prefill/decode grid over paged disaggregated caches.
 
@@ -674,6 +784,7 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
     r = kr_pool.shape[-1]
     n_pages = bt_b.shape[1]
     rows = g * sq
+    quant = kb_scale is not None
 
     qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
     bkt = b_k.reshape(bsz, r, hkv, d).transpose(0, 2, 1, 3)
@@ -681,31 +792,44 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
 
     kernel = functools.partial(_kernel_mixed, scale=scale, page=page,
                                window=window, rope_theta=rope_theta,
-                               use_rope=use_rope)
+                               use_rope=use_rope, quant=quant)
     clamp = _prefill_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, btr, kvl, st, ql):
         return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, btr, kvl, st, ql):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h)
+
     def _r_map(b, h, j, btb, btr, kvl, st, ql):
         return (btr[b, clamp(j, kvl[b], st[b])], 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, sq, d),
+                     lambda b, h, j, btb, btr, kvl, st, ql:
+                     (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+    in_specs += [
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, page, r), _r_map),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
+    ]
+    operands += [kr_pool, vr_pool, bkt, bvt]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, sq, d),
-                         lambda b, h, j, btb, btr, kvl, st, ql:
-                         (b, h, 0, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, page, r), _r_map),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, r, d),
-                         lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, sq, d),
             lambda b, h, j, btb, btr, kvl, st, ql: (b, h, 0, 0, 0)),
@@ -723,14 +847,18 @@ def paged_residual_attention_mixed(q, kb_pool, vb_pool, kr_pool, vr_pool,
         interpret=interpret,
     )(bt_b.astype(jnp.int32), bt_r.astype(jnp.int32),
       kv_len.astype(jnp.int32), start.astype(jnp.int32),
-      q_len.astype(jnp.int32), qt, kb_pool, vb_pool, kr_pool, vr_pool,
-      bkt, bvt)
+      q_len.astype(jnp.int32), *operands)
     return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)
 
 
 def _kernel_mixed_base(bt_b_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
-                       kb_ref, vb_ref, out_ref, m_scr, l_scr, acc_scr, *,
-                       scale: float, page: int, window: int):
+                       kb_ref, vb_ref, *rest, scale: float, page: int,
+                       window: int, quant: bool = False):
+    if quant:
+        ks_ref, vs_ref, out_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        out_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -753,6 +881,8 @@ def _kernel_mixed_base(bt_b_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
     @pl.when(live)
     def _compute():
         k = kb_ref[0, :, 0, :].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * ks_ref[0]
         q = q_ref[0, 0].astype(jnp.float32).reshape(rows, d)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         rowidx = jax.lax.broadcasted_iota(
@@ -762,8 +892,10 @@ def _kernel_mixed_base(bt_b_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
         mask = (kpos < kvlen) & (kpos <= rowpos) & (rowidx < qlen)
         if window > 0:
             mask = mask & (kpos > rowpos - window)
-        _softmax_update(s, mask, m_scr, l_scr, acc_scr,
-                        vb_ref[0, :, 0, :].astype(jnp.float32))
+        v_b = vb_ref[0, :, 0, :].astype(jnp.float32)
+        if vs_ref is not None:
+            v_b = v_b * vs_ref[0]
+        _softmax_update(s, mask, m_scr, l_scr, acc_scr, v_b)
 
     @pl.when(j == nj - 1)
     def _fini():
@@ -777,6 +909,7 @@ def _kernel_mixed_base(bt_b_ref, kvlen_ref, start_ref, qlen_ref, q_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
 def paged_attention_mixed_base(q, kb_pool, vb_pool, bt_b, start, q_len,
                                kv_len, *, scale: float, window: int = 0,
+                               kb_scale=None, vb_scale=None,
                                interpret: bool = True):
     """Base-only unified mixed grid: unified caches / no-LoRA requests.
     Shapes as :func:`paged_residual_attention_mixed` minus the residual
@@ -786,24 +919,35 @@ def paged_attention_mixed_base(q, kb_pool, vb_pool, bt_b, start, q_len,
     g = hq // hkv
     n_pages = bt_b.shape[1]
     rows = g * sq
+    quant = kb_scale is not None
     qt = q.reshape(bsz, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
 
     kernel = functools.partial(_kernel_mixed_base, scale=scale, page=page,
-                               window=window)
+                               window=window, quant=quant)
     clamp = _prefill_page_clamp(page, window)
 
     def _b_map(b, h, j, btb, kvl, st, ql):
         return (btb[b, clamp(j, kvl[b], st[b])], 0, h, 0)
 
+    def _s_map(b, h, j, btb, kvl, st, ql):
+        return (btb[b, clamp(j, kvl[b], st[b])], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, sq, d),
+                     lambda b, h, j, btb, kvl, st, ql: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+        pl.BlockSpec((1, page, 1, d), _b_map),
+    ]
+    operands = [qt, kb_pool, vb_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _s_map),
+                     pl.BlockSpec((1, page, 1), _s_map)]
+        operands += [kb_scale, vb_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(bsz, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, sq, d),
-                         lambda b, h, j, btb, kvl, st, ql: (b, h, 0, 0, 0)),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-            pl.BlockSpec((1, page, 1, d), _b_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, g, sq, d),
             lambda b, h, j, btb, kvl, st, ql: (b, h, 0, 0, 0)),
@@ -819,6 +963,5 @@ def paged_attention_mixed_base(q, kb_pool, vb_pool, bt_b, start, q_len,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, sq, d), q.dtype),
         interpret=interpret,
     )(bt_b.astype(jnp.int32), kv_len.astype(jnp.int32),
-      start.astype(jnp.int32), q_len.astype(jnp.int32), qt, kb_pool,
-      vb_pool)
+      start.astype(jnp.int32), q_len.astype(jnp.int32), *operands)
     return out.transpose(0, 3, 1, 2, 4).reshape(bsz, sq, hq, d)

@@ -40,15 +40,24 @@ def reconstruct(k_base, v_base, k_res, v_res, b_k, b_v, sin, cos):
 
 
 def _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k, b_v,
-                     bt_b, bt_r, *, rope_theta: float, use_rope: bool):
+                     bt_b, bt_r, *, rope_theta: float, use_rope: bool,
+                     kb_scale=None, vb_scale=None):
     """Gather block-table pages into contiguous (B, Sk, ...) views and, for
     the disaggregated layout, reconstruct full K/V.  Shared by the paged
-    decode and prefill oracles."""
+    decode and prefill oracles.  ``kb_scale``/``vb_scale`` ((P, page,
+    Hkv) f32, or None) mark the base pools as int8: pages are dequantized
+    right after the gather, BEFORE reconstruction, mirroring the kernels'
+    in-VMEM dequant (DESIGN.md §18)."""
     bsz, d = q.shape[0], q.shape[-1]
     page, hkv = kb_pool.shape[1], kb_pool.shape[2]
     sk = bt_b.shape[1] * page
     kb = kb_pool[bt_b].reshape(bsz, sk, hkv, d)
     vb = vb_pool[bt_b].reshape(bsz, sk, hkv, d)
+    if kb_scale is not None:
+        ks = kb_scale[bt_b].reshape(bsz, sk, hkv)[..., None]
+        vs = vb_scale[bt_b].reshape(bsz, sk, hkv)[..., None]
+        kb = (kb.astype(jnp.float32) * ks).astype(q.dtype)
+        vb = (vb.astype(jnp.float32) * vs).astype(q.dtype)
     if kr_pool is None:
         return kb, vb
     kr = kr_pool[bt_r].reshape(bsz, sk, -1)
@@ -78,7 +87,9 @@ def paged_residual_attention_ref(q, kb_pool, vb_pool, kr_pool, vr_pool,
                                  scale: Optional[float] = None,
                                  window: int = 0,
                                  rope_theta: float = 10_000.0,
-                                 use_rope: bool = True) -> jnp.ndarray:
+                                 use_rope: bool = True,
+                                 kb_scale=None,
+                                 vb_scale=None) -> jnp.ndarray:
     """XLA mirror of the paged decode kernels: gather the block-table pages
     into contiguous views, then run the dense oracle.  Same interface as
     :func:`repro.kernels.paged_residual_attention.
@@ -101,7 +112,8 @@ def paged_residual_attention_ref(q, kb_pool, vb_pool, kr_pool, vr_pool,
         scale = d ** -0.5
     k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
                             b_v, bt_b, bt_r, rope_theta=rope_theta,
-                            use_rope=use_rope)
+                            use_rope=use_rope, kb_scale=kb_scale,
+                            vb_scale=vb_scale)
     kp = jnp.arange(sk)[None, None, None, :]
     # the query sits at kv_len - 1, so the causal bound and the validity
     # bound coincide: one mask term covers both
@@ -118,7 +130,8 @@ def paged_residual_attention_prefill_ref(q, kb_pool, vb_pool, kr_pool,
                                          scale: Optional[float] = None,
                                          window: int = 0,
                                          rope_theta: float = 10_000.0,
-                                         use_rope: bool = True
+                                         use_rope: bool = True,
+                                         kb_scale=None, vb_scale=None
                                          ) -> jnp.ndarray:
     """XLA mirror of the paged chunked-prefill kernels (DESIGN.md §13):
     gather block-table pages into contiguous views, reconstruct (disagg)
@@ -135,7 +148,8 @@ def paged_residual_attention_prefill_ref(q, kb_pool, vb_pool, kr_pool,
         scale = d ** -0.5
     k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
                             b_v, bt_b, bt_r, rope_theta=rope_theta,
-                            use_rope=use_rope)
+                            use_rope=use_rope, kb_scale=kb_scale,
+                            vb_scale=vb_scale)
     qpos = start[:, None] + jnp.arange(sq)[None]          # (B, Sq)
     qp = qpos[:, None, :, None]
     kp = jnp.arange(sk)[None, None, None, :]
@@ -151,7 +165,8 @@ def paged_residual_attention_mixed_ref(q, kb_pool, vb_pool, kr_pool,
                                        scale: Optional[float] = None,
                                        window: int = 0,
                                        rope_theta: float = 10_000.0,
-                                       use_rope: bool = True
+                                       use_rope: bool = True,
+                                       kb_scale=None, vb_scale=None
                                        ) -> jnp.ndarray:
     """XLA mirror of the unified mixed prefill/decode kernels
     (DESIGN.md §14): the prefill oracle generalized with a per-row
@@ -170,7 +185,8 @@ def paged_residual_attention_mixed_ref(q, kb_pool, vb_pool, kr_pool,
         scale = d ** -0.5
     k, v = _gather_paged_kv(q, kb_pool, vb_pool, kr_pool, vr_pool, b_k,
                             b_v, bt_b, bt_r, rope_theta=rope_theta,
-                            use_rope=use_rope)
+                            use_rope=use_rope, kb_scale=kb_scale,
+                            vb_scale=vb_scale)
     rowidx = jnp.arange(sq)[None]                       # (1, Sq)
     rowvalid = rowidx < q_len[:, None]                  # (B, Sq)
     qpos = start[:, None] + rowidx

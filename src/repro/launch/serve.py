@@ -10,7 +10,9 @@ context in an :class:`AgentSession` and forks agents off it.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 
 import jax
 
@@ -43,8 +45,14 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                  preempt_after_steps: int = 4,
                  fault_plan: str = "",
                  fault_seed: int = 0,
-                 watchdog_s: float = 10.0):
+                 watchdog_s: float = 10.0,
+                 kv_quant: str = "none",
+                 kv_codec: str = "identity",
+                 disk_tier_bytes: int = 0,
+                 persist_dir: str = ""):
     cfg = tiny_serving_model(rank=rank)
+    if kv_quant != "none":
+        cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
     lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(seed + 1),
                                 n_adapters=n_adapters)
@@ -68,8 +76,19 @@ def build_server(mode: str, *, rank: int = 8, max_pages: int = 512,
                      preempt=preempt,
                      preempt_after_steps=preempt_after_steps,
                      fault_plan=fault_plan, fault_seed=fault_seed,
-                     watchdog_s=watchdog_s)
-    return ForkServer(cfg, params, lora, sc), cfg
+                     watchdog_s=watchdog_s,
+                     kv_codec=kv_codec, disk_tier_bytes=disk_tier_bytes,
+                     persist_dir=persist_dir)
+    server = ForkServer(cfg, params, lora, sc)
+    # restart rehydration (DESIGN.md §18): a manifest left by a previous
+    # run's persist() grafts its shared prefixes into the radix tree as
+    # host-tier nodes — matched requests promote instead of re-prefilling
+    if persist_dir and os.path.exists(os.path.join(persist_dir,
+                                                   "manifest.json")):
+        n = server.engine.restore(persist_dir)
+        print(f"restore: rehydrated {n} page(s) from {persist_dir}",
+              flush=True)
+    return server, cfg
 
 
 def build_engine(mode: str, **kw):
@@ -109,6 +128,20 @@ def main() -> None:
     ap.add_argument("--tier-promote-limit", type=int, default=0,
                     help="max pages promoted host→device per match "
                          "(0 = unlimited)")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="bCache page quantization inside the paged "
+                         "kernels (DESIGN.md §18)")
+    ap.add_argument("--kv-codec", default="identity",
+                    choices=["identity", "int8", "zstd"],
+                    help="blob codec applied on demote to host/disk and "
+                         "reversed on promote (DESIGN.md §18)")
+    ap.add_argument("--disk-tier-mb", type=int, default=0,
+                    help="disk KV tier budget in MiB below the host tier "
+                         "(0 = disabled, DESIGN.md §18)")
+    ap.add_argument("--persist-dir", default="",
+                    help="directory for the disk tier + persist manifest; "
+                         "a restarted server rehydrates cached prefixes "
+                         "from it instead of re-prefilling (DESIGN.md §18)")
     ap.add_argument("--phase-separated", action="store_true",
                     help="disable iteration-level continuous batching and "
                          "run the legacy phase-separated step loop "
@@ -184,6 +217,9 @@ def main() -> None:
         args.mode, max_pages=args.max_pages,
         host_tier_bytes=args.host_tier_mb << 20,
         tier_promote_limit=args.tier_promote_limit,
+        kv_quant=args.kv_quant, kv_codec=args.kv_codec,
+        disk_tier_bytes=args.disk_tier_mb << 20,
+        persist_dir=args.persist_dir,
         broadcast_fork=args.broadcast_fork,
         adaptive_fallback=args.adaptive_fallback,
         use_paged_kernel=not args.gather_decode,
@@ -229,6 +265,10 @@ def main() -> None:
             fe.begin_drain()
             while not fe.drained and fe._thread.is_alive():
                 fe._thread.join(timeout=0.2)
+        if args.persist_dir:
+            n = server.engine.persist(args.persist_dir)
+            print(f"persist: wrote {n} page(s) to {args.persist_dir}",
+                  flush=True)
         fe.shutdown()
         return
     sampling = SamplingParams(temperature=args.temperature,
@@ -242,6 +282,10 @@ def main() -> None:
     driver = WorkflowDriver(server, wf)
     rep = driver.run_react() if args.workflow == "react" \
         else driver.run_mapreduce()
+    if args.persist_dir:
+        n = server.engine.persist(args.persist_dir)
+        print(f"persist: wrote {n} page(s) to {args.persist_dir}",
+              flush=True)
     if args.json:
         print(json.dumps(rep, default=str, indent=1))
     else:

@@ -60,24 +60,38 @@ class Pools(NamedTuple):
     vb: jnp.ndarray          # (L, Pb, page, Hkv, hd)  base V
     kr: Optional[jnp.ndarray]  # (L, Pr, page, R)      residual K (no RoPE)
     vr: Optional[jnp.ndarray]
+    # int8 bCache pages (ModelConfig.kv_quant == "int8"): per-token-per-head
+    # f32 dequant scales, written alongside every kb/vb write.  None on the
+    # full-precision path; the rCache is rank-r and stays unquantized.
+    kb_s: Optional[jnp.ndarray] = None   # (L, Pb, page, Hkv)
+    vb_s: Optional[jnp.ndarray] = None
 
 
 def make_pools(cfg: ModelConfig, num_pages: int, num_res_pages: int,
                page_size: int, disagg: bool, dtype=None) -> Pools:
     dt = dtype or cfg.activation_dtype
     L, hd = cfg.num_layers, cfg.resolved_head_dim
-    kb = jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads, hd), dt)
+    quant = getattr(cfg, "kv_quant", "none") == "int8"
+    kb = jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads, hd),
+                   jnp.int8 if quant else dt)
     vb = jnp.zeros_like(kb)
     if disagg:
         kr = jnp.zeros((L, num_res_pages, page_size, cfg.lora.rank), dt)
         vr = jnp.zeros_like(kr)
     else:
         kr = vr = None
-    return Pools(kb, vb, kr, vr)
+    kb_s = vb_s = None
+    if quant:
+        kb_s = jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads),
+                         jnp.float32)
+        vb_s = jnp.zeros_like(kb_s)
+    return Pools(kb, vb, kr, vr, kb_s, vb_s)
 
 
 def pool_bytes(pools: Pools) -> Dict[str, int]:
     out = {"base": int(pools.kb.nbytes + pools.vb.nbytes)}
+    if pools.kb_s is not None:
+        out["base"] += int(pools.kb_s.nbytes + pools.vb_s.nbytes)
     out["residual"] = int(pools.kr.nbytes + pools.vr.nbytes) \
         if pools.kr is not None else 0
     return out
@@ -102,6 +116,9 @@ class PagedExecutor:
         # run the same kernels with window-clamped page walks (§13).
         self.use_paged = serve_cfg.use_paged_kernel
         self.min_table_pages = serve_cfg.min_table_pages
+        # int8 bCache paging (DESIGN.md §18): quantize at write time,
+        # dequantize per page tile inside the kernels / at the gather
+        self.kv_quant = getattr(cfg, "kv_quant", "none") == "int8"
         # executor calls that took a legacy gather-to-contiguous path —
         # the acceptance probe for "zero gather copies" (0 whenever
         # use_paged_kernel=True; surfaced via Engine.metrics())
@@ -143,8 +160,17 @@ class PagedExecutor:
         # per-page COPIES, not views: each blob must be independently
         # freeable or the HostTier's byte accounting undercounts (a
         # surviving 1-page view would pin the whole n-page export)
-        return [{"k": karr[:, i].copy(), "v": varr[:, i].copy()}
-                for i in range(len(page_ids))]
+        blobs = [{"k": karr[:, i].copy(), "v": varr[:, i].copy()}
+                 for i in range(len(page_ids))]
+        if kind == "base" and self.kv_quant:
+            # int8 pages travel with their dequant scales so a round trip
+            # through host/disk restores the cache bit-identically
+            ksarr = np.asarray(self.pools.kb_s[:, ids])
+            vsarr = np.asarray(self.pools.vb_s[:, ids])
+            for i, b in enumerate(blobs):
+                b["ks"] = ksarr[:, i].copy()
+                b["vs"] = vsarr[:, i].copy()
+        return blobs
 
     def import_pages(self, kind: str, page_ids: Sequence[int],
                      blobs: Sequence[Dict]) -> None:
@@ -163,11 +189,19 @@ class PagedExecutor:
         blobs = list(blobs) + [blobs[0]] * (npad - n)
         k = jnp.asarray(np.stack([b["k"] for b in blobs], axis=1))
         v = jnp.asarray(np.stack([b["v"] for b in blobs], axis=1))
+        quant = kind == "base" and self.kv_quant
         key = (kind, npad)
         if not hasattr(self, "_import_jit"):
             self._import_jit = {}
         if key not in self._import_jit:
-            if kind == "base":
+            if quant:
+                def fn(pools, ids_, k_, v_, ks_, vs_):
+                    return pools._replace(
+                        kb=pools.kb.at[:, ids_].set(k_),
+                        vb=pools.vb.at[:, ids_].set(v_),
+                        kb_s=pools.kb_s.at[:, ids_].set(ks_),
+                        vb_s=pools.vb_s.at[:, ids_].set(vs_))
+            elif kind == "base":
                 def fn(pools, ids_, k_, v_):
                     return pools._replace(
                         kb=pools.kb.at[:, ids_].set(k_),
@@ -178,8 +212,14 @@ class PagedExecutor:
                         kr=pools.kr.at[:, ids_].set(k_),
                         vr=pools.vr.at[:, ids_].set(v_))
             self._import_jit[key] = jax.jit(fn, donate_argnums=(0,))
-        self.pools = self._import_jit[key](
-            self.pools, jnp.asarray(ids, jnp.int32), k, v)
+        if quant:
+            ks = jnp.asarray(np.stack([b["ks"] for b in blobs], axis=1))
+            vs = jnp.asarray(np.stack([b["vs"] for b in blobs], axis=1))
+            self.pools = self._import_jit[key](
+                self.pools, jnp.asarray(ids, jnp.int32), k, v, ks, vs)
+        else:
+            self.pools = self._import_jit[key](
+                self.pools, jnp.asarray(ids, jnp.int32), k, v)
 
     # ------------------------------------------------------------ helpers
     def _layer_params(self, li):
@@ -236,6 +276,26 @@ class PagedExecutor:
                    max(min(self.min_table_pages, self.max_pages_per_req),
                        _pow2(need)))
 
+    def _maybe_quant(self, kb_, vb_):
+        """Write-time bCache quantization (kv_quant == "int8"): the same
+        per-(position, head) symmetric scheme as the dense-cache path
+        (``tfm.quantize_kv``), so tier round trips stay bit-exact against
+        what the kernels dequantize.  Returns (kb, vb, ks, vs) with
+        ks/vs None on the full-precision path."""
+        if not self.kv_quant:
+            return kb_, vb_, None, None
+        kq, ks = tfm.quantize_kv(kb_)
+        vq, vs = tfm.quantize_kv(vb_)
+        return kq, vq, ks, vs
+
+    def _dq_gather(self, pool_l, scale_l, bt, bsz, w):
+        """Legacy gather path under int8: gather pages AND scales, then
+        dequantize the contiguous view (the kernels instead dequantize
+        per page tile in VMEM)."""
+        x = pool_l[bt].astype(jnp.float32) * scale_l[bt][..., None]
+        return x.astype(self.cfg.activation_dtype).reshape(
+            bsz, w, self.cfg.num_kv_heads, -1)
+
     # ------------------------------------------------------------- decode
     def _decode_fn(self, pools: Pools, tokens, kv_len, adapter_ids, bt_b,
                    bt_r, wpage_b, wpage_r, woff, temps, top_ks, top_ps,
@@ -271,15 +331,21 @@ class PagedExecutor:
                                    kv_len[:, None])
             kb_, vb_, kr_, vr_, bk, bv = self._project_kv(
                 p_l, lora_l, h, sin, cos, adapter_ids)
+            kb_, vb_, ks_, vs_ = self._maybe_quant(kb_, vb_)
             # write new token
             kbp = new_pools.kb.at[li, wpage_b, woff].set(kb_[:, 0])
             vbp = new_pools.vb.at[li, wpage_b, woff].set(vb_[:, 0])
+            if self.kv_quant:
+                ksp = new_pools.kb_s.at[li, wpage_b, woff].set(ks_[:, 0])
+                vsp = new_pools.vb_s.at[li, wpage_b, woff].set(vs_[:, 0])
+            else:
+                ksp, vsp = new_pools.kb_s, new_pools.vb_s
             if self.disagg:
                 krp = new_pools.kr.at[li, wpage_r, woff].set(kr_[:, 0])
                 vrp = new_pools.vr.at[li, wpage_r, woff].set(vr_[:, 0])
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
-            new_pools = Pools(kbp, vbp, krp, vrp)
+            new_pools = Pools(kbp, vbp, krp, vrp, ksp, vsp)
             if self.use_paged:
                 # page-native attention: pools + block tables, no gather
                 attn = kernel_ops.paged_residual_attention(
@@ -291,12 +357,18 @@ class PagedExecutor:
                     bt_b, bt_r if self.disagg else None, kv_len + 1,
                     scale=cfg.resolved_head_dim ** -0.5,
                     window=cfg.sliding_window,
-                    rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+                    rope_theta=cfg.rope_theta, use_rope=cfg.use_rope,
+                    kb_scale=ksp[li] if self.kv_quant else None,
+                    vb_scale=vsp[li] if self.kv_quant else None)
             else:
                 # legacy: gather this request's pages -> contiguous view
                 w = bt_b.shape[1] * self.page
-                kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
-                vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                if self.kv_quant:
+                    kc = self._dq_gather(kbp[li], ksp[li], bt_b, bsz, w)
+                    vc = self._dq_gather(vbp[li], vsp[li], bt_b, bsz, w)
+                else:
+                    kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                    vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
                 if self.disagg:
                     krc = krp[li][bt_r].reshape(bsz, w, -1)
                     vrc = vrp[li][bt_r].reshape(bsz, w, -1)
@@ -448,16 +520,22 @@ class PagedExecutor:
                                    positions)
             kb_, vb_, kr_, vr_, bk, bv = self._project_kv(
                 p_l, lora_l, h, sin, cos, adapter_ids)
+            kb_, vb_, ks_, vs_ = self._maybe_quant(kb_, vb_)
             wp_b = jnp.where(valid, wpages_b, self.dump_page)
             wp_r = jnp.where(valid, wpages_r, self.dump_page_r)
             kbp = new_pools.kb.at[li, wp_b, woff].set(kb_)
             vbp = new_pools.vb.at[li, wp_b, woff].set(vb_)
+            if self.kv_quant:
+                ksp = new_pools.kb_s.at[li, wp_b, woff].set(ks_)
+                vsp = new_pools.vb_s.at[li, wp_b, woff].set(vs_)
+            else:
+                ksp, vsp = new_pools.kb_s, new_pools.vb_s
             if self.disagg:
                 krp = new_pools.kr.at[li, wp_r, woff].set(kr_)
                 vrp = new_pools.vr.at[li, wp_r, woff].set(vr_)
             else:
                 krp, vrp = new_pools.kr, new_pools.vr
-            new_pools = Pools(kbp, vbp, krp, vrp)
+            new_pools = Pools(kbp, vbp, krp, vrp, ksp, vsp)
             if self.use_paged and unified:
                 # unified mixed grid (§14): per-row q-length scalar
                 # prefetch — decode rows (n_valid=1) and prefill chunks
@@ -471,7 +549,9 @@ class PagedExecutor:
                     bt_b, bt_r if self.disagg else None, start, n_valid,
                     start + n_valid, scale=cfg.resolved_head_dim ** -0.5,
                     window=cfg.sliding_window, rope_theta=cfg.rope_theta,
-                    use_rope=cfg.use_rope)
+                    use_rope=cfg.use_rope,
+                    kb_scale=ksp[li] if self.kv_quant else None,
+                    vb_scale=vsp[li] if self.kv_quant else None)
             elif self.use_paged:
                 # page-native prefill (§13): the chunk's K/V is already in
                 # the pools — stream KV page by page via the block tables,
@@ -485,12 +565,18 @@ class PagedExecutor:
                     bt_b, bt_r if self.disagg else None, start,
                     start + n_valid, scale=cfg.resolved_head_dim ** -0.5,
                     window=cfg.sliding_window, rope_theta=cfg.rope_theta,
-                    use_rope=cfg.use_rope)
+                    use_rope=cfg.use_rope,
+                    kb_scale=ksp[li] if self.kv_quant else None,
+                    vb_scale=vsp[li] if self.kv_quant else None)
             else:
                 # legacy: gather every request's pages -> contiguous view
                 w = bt_b.shape[1] * self.page
-                kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
-                vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                if self.kv_quant:
+                    kc = self._dq_gather(kbp[li], ksp[li], bt_b, bsz, w)
+                    vc = self._dq_gather(vbp[li], vsp[li], bt_b, bsz, w)
+                else:
+                    kc = kbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
+                    vc = vbp[li][bt_b].reshape(bsz, w, cfg.num_kv_heads, -1)
                 if self.disagg:
                     krc = krp[li][bt_r].reshape(bsz, w, -1)
                     vrc = vrp[li][bt_r].reshape(bsz, w, -1)
@@ -762,13 +848,19 @@ class PagedExecutor:
                 * sc[:, None, None]
             vr_ = jnp.einsum("sd,kdr->ksr", h[0], a_v.astype(x.dtype)) \
                 * sc[:, None, None]
+            kb_, vb_, ks_, vs_ = self._maybe_quant(kb_, vb_)
             wp_b = jnp.where(valid, wpages_b, self.dump_page)
             wp_r = jnp.where(valid[None], wpages_r, self.dump_page_r)
             kbp = new_pools.kb.at[li, wp_b, woff].set(kb_[0])
             vbp = new_pools.vb.at[li, wp_b, woff].set(vb_[0])
+            if self.kv_quant:
+                ksp = new_pools.kb_s.at[li, wp_b, woff].set(ks_[0])
+                vsp = new_pools.vb_s.at[li, wp_b, woff].set(vs_[0])
+            else:
+                ksp, vsp = new_pools.kb_s, new_pools.vb_s
             krp = new_pools.kr.at[li, wp_r, woff[None]].set(kr_)
             vrp = new_pools.vr.at[li, wp_r, woff[None]].set(vr_)
-            new_pools = Pools(kbp, vbp, krp, vrp)
+            new_pools = Pools(kbp, vbp, krp, vrp, ksp, vsp)
             # attention over base cache only
             if self.use_paged:
                 attn = kernel_ops.paged_residual_attention_prefill(
@@ -777,11 +869,17 @@ class PagedExecutor:
                     (start + n_valid)[None],
                     scale=cfg.resolved_head_dim ** -0.5,
                     window=cfg.sliding_window, rope_theta=cfg.rope_theta,
-                    use_rope=cfg.use_rope)
+                    use_rope=cfg.use_rope,
+                    kb_scale=ksp[li] if self.kv_quant else None,
+                    vb_scale=vsp[li] if self.kv_quant else None)
             else:
                 w = bt_b.shape[0] * self.page
-                kc = kbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
-                vc = vbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
+                if self.kv_quant:
+                    kc = self._dq_gather(kbp[li], ksp[li], bt_b[None], 1, w)
+                    vc = self._dq_gather(vbp[li], vsp[li], bt_b[None], 1, w)
+                else:
+                    kc = kbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
+                    vc = vbp[li][bt_b].reshape(1, w, cfg.num_kv_heads, -1)
                 kmask_pos = jnp.arange(w)[None]
                 attn = tfm._attend(q, kc, vc, None, None, None, None,
                                    kmask_pos, (start + n_valid)[None],

@@ -30,6 +30,9 @@ Known sites (grep for ``faults.fire`` / ``faults.io``):
   pool_alloc     device page allocation (engine._alloc) — fail → OOM path
   tier_demote    device→host page export (tiers.demote_node IO)
   tier_promote   host→device page import (tiers.promote_node IO)
+  disk_io        disk-tier file read/write (tiers.DiskTier io_hook) —
+                 spill failure drops the node, promote failure truncates
+                 the match; either way the server recomputes (§18)
   nan_logits     poison one batch row's logits in-jit (engine step)
   pump_stall     sleep ``stall_s`` inside the step loop (watchdog food)
   executor       raise before the batched executor call (isolation test)
@@ -41,8 +44,8 @@ import random
 import time
 from typing import Dict, List, Optional
 
-SITES = ("pool_alloc", "tier_demote", "tier_promote", "nan_logits",
-         "pump_stall", "executor")
+SITES = ("pool_alloc", "tier_demote", "tier_promote", "disk_io",
+         "nan_logits", "pump_stall", "executor")
 
 
 class FaultError(RuntimeError):

@@ -69,6 +69,7 @@ import dataclasses
 import http.client
 import itertools
 import json
+import math
 import queue
 import random
 import threading
@@ -522,8 +523,13 @@ class HttpFrontend:
             if status != 200 or not stream:
                 extra = {}
                 if status == 429:
+                    # ceil with a floor of 1: round() turned any hint
+                    # under 0.5 s into "Retry-After: 0", telling a
+                    # compliant client (our own ForkClient backoff
+                    # included) to retry IMMEDIATELY and hammer the
+                    # already-overloaded server
                     extra["Retry-After"] = \
-                        str(int(round(out.retry_after_s)))
+                        str(max(1, math.ceil(out.retry_after_s)))
                 await self._respond(writer, status, self._final_doc(out),
                                     extra_headers=extra)
                 return

@@ -66,7 +66,7 @@ class Node:
         self.pin_ref = 0                # long-lived: held per AgentSession
                                         # (DESIGN.md §11) — blocks eviction
                                         # AND demotion for the session's life
-        self.tier = "device"            # device | host
+        self.tier = "device"            # device | host | disk
         self.warm = False               # was ever session-pinned: after the
                                         # pin drops, the context stays ranked
                                         # ABOVE cold cache in eviction order
@@ -178,7 +178,7 @@ class RadixTree:
         head.pin_ref = child.pin_ref         # ...and so do session pins
         head.warm = child.warm               # ...and the warmth marker
         head.tier = child.tier
-        if head.tier == "host" and getattr(self.pool, "is_tiered", False):
+        if head.tier != "device" and getattr(self.pool, "is_tiered", False):
             self.pool.retarget(head.pages, head)   # handles moved to head
         child.parent.children[head.key[0]] = head
         child.key = child.key[keep:]
@@ -258,6 +258,47 @@ class RadixTree:
         node.children[new_tokens[0]] = child
         self.pool.incref(new_pages)
         return len(new_pages)
+
+    def graft_host(self, tokens: Sequence[int], blobs) -> int:
+        """Attach a host-tier node holding ``blobs`` for the page-aligned
+        suffix of ``tokens`` not already present (restore path, DESIGN.md
+        §18).  ``blobs`` are LOGICAL (decoded) page blobs covering exactly
+        the suffix; they are encoded with the pool's codec and stored in
+        the host tier, so the first match promotes them like any demoted
+        node — the restored context costs zero device pages until used.
+
+        Restores are best-effort: a sub-page divergence from existing
+        content, a missing tier, or a full host budget skips the graft
+        (returns 0) rather than failing the restart.
+        """
+        if not getattr(self.pool, "is_tiered", False):
+            return 0
+        tokens = tuple(tokens)
+        page_size = self.pool.page_size
+        node = self.root
+        matched = 0
+        # whole-segment walk only: persist records arrive parent-first, so
+        # the prefix (if restored) exists as complete nodes
+        while matched < len(tokens):
+            child = node.children.get(tokens[matched])
+            if child is None or tokens[matched:matched + len(child.key)] \
+                    != child.key:
+                break
+            matched += len(child.key)
+            node = child
+        new_tokens = tokens[matched:]
+        if not new_tokens or len(new_tokens) != len(blobs) * page_size:
+            return 0
+        if new_tokens[0] in node.children:
+            return 0
+        handles = self.pool.host_put_blobs(blobs)
+        if handles is None:
+            return 0
+        child = Node(tuple(new_tokens), handles, node)
+        child.tier = "host"
+        node.children[new_tokens[0]] = child
+        self.pool.adopt_host_handles(handles, child)
+        return len(handles)
 
     # ------------------------------------------------------------ eviction
     def _leaves(self) -> List[Node]:

@@ -29,12 +29,26 @@ CoW invariants across tiers (DESIGN.md §10):
     tier they occupy: device eviction skips them and the host LRU refuses
     to drop their entries.
 
+Below the host sits an optional third tier (DESIGN.md §18):
+
+  * blob *codecs* — pluggable transforms applied on demote and reversed
+    on promote (``identity`` / ``int8`` per-row-scale quantization /
+    ``zstd`` lossless compression), so the host budget holds *stored*
+    bytes, not logical bytes;
+  * :class:`DiskTier` — a file-backed page store with the same
+    handle/owner/LRU contract as :class:`HostTier`.  Host-LRU pressure
+    *spills* whole nodes to disk (``tier == "disk"``) instead of
+    destroying them; disk-LRU pressure is the true end of the line.
+
 When the host budget is also exhausted the tier degrades to the seed
 behaviour: true eviction (the node and its bytes are destroyed).
 """
 from __future__ import annotations
 
 import itertools
+import json
+import os
+import zlib
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -48,6 +62,190 @@ Blob = Dict[str, np.ndarray]
 
 def blob_bytes(blob: Blob) -> int:
     return sum(int(a.nbytes) for a in blob.values())
+
+
+# --------------------------------------------------------------------------
+# Blob codecs (DESIGN.md §18): encode on demote, decode on promote.
+# Encoded blobs are still Dict[str, np.ndarray], so HostTier/DiskTier store
+# and account them unchanged — the budget naturally tracks STORED bytes.
+# --------------------------------------------------------------------------
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name
+
+
+def _dtype_from_name(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                      # registered by jax anyway
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _meta_arr(doc: dict) -> np.ndarray:
+    return np.frombuffer(json.dumps(doc).encode(), np.uint8)
+
+
+def _meta_doc(arr: np.ndarray) -> dict:
+    return json.loads(bytes(arr).decode())
+
+
+class IdentityCodec:
+    """Pass-through: stored bytes == logical bytes, bit-identical."""
+
+    name = "identity"
+    lossless = True
+    deterministic_size = True
+
+    def encode(self, blob: Blob) -> Blob:
+        return blob
+
+    def decode(self, blob: Blob) -> Blob:
+        return blob
+
+
+class Int8Codec:
+    """Symmetric per-row int8: ``scale = amax(|x|, axis=-1) / 127``.
+
+    Mirrors the dense-cache ``ModelConfig.kv_quant`` math
+    (transformer.quantize_kv): one float32 scale per trailing-axis row,
+    so a (L, page, Hkv, hd) K blob quantizes per (layer, token, head).
+    Lossy with bounded error: |x - deq(q)| <= scale/2 = amax/254 per row.
+    Non-float arrays (e.g. already-int8 pool pages) pass through.
+    """
+
+    name = "int8"
+    lossless = False
+    deterministic_size = True
+
+    def encode(self, blob: Blob) -> Blob:
+        enc: Blob = {}
+        for key, a in blob.items():
+            if not np.issubdtype(np.dtype(a.dtype), np.floating) \
+                    and _dtype_name(a.dtype) != "bfloat16":
+                enc[key] = a
+                continue
+            x = np.asarray(a, np.float32)
+            scale = np.abs(x).max(axis=-1) / 127.0
+            scale = np.maximum(scale, 1e-8)
+            q = np.clip(np.round(x / scale[..., None]), -127, 127)
+            enc[key + ".q"] = q.astype(np.int8)
+            enc[key + ".s"] = scale.astype(np.float32)
+            enc[key + ".meta"] = _meta_arr({"dtype": _dtype_name(a.dtype)})
+        return enc
+
+    def decode(self, blob: Blob) -> Blob:
+        dec: Blob = {}
+        for key, a in blob.items():
+            if key.endswith(".q"):
+                base = key[:-2]
+                scale = blob[base + ".s"]
+                dt = _dtype_from_name(_meta_doc(blob[base + ".meta"])["dtype"])
+                dec[base] = (a.astype(np.float32)
+                             * scale[..., None]).astype(dt)
+            elif key.endswith(".s") or key.endswith(".meta"):
+                continue
+            else:
+                dec[key] = a
+        return dec
+
+
+class ZstdCodec:
+    """Lossless byte compression per array.
+
+    Uses the ``zstandard`` module when importable; this environment ships
+    without it, so the codec gates on the import and falls back to stdlib
+    ``zlib`` — same lossless bit-identical contract, different ratio/speed.
+    ``backend`` records which one is active (surfaced in stats).
+    """
+
+    name = "zstd"
+    lossless = True
+    deterministic_size = False     # stored size is content-dependent
+
+    def __init__(self):
+        try:
+            import zstandard
+            self._c = zstandard.ZstdCompressor()
+            self._d = zstandard.ZstdDecompressor()
+            self.backend = "zstandard"
+        except ImportError:
+            self._c = self._d = None
+            self.backend = "zlib"
+
+    def _compress(self, raw: bytes) -> bytes:
+        if self._c is not None:
+            return self._c.compress(raw)
+        return zlib.compress(raw, 6)
+
+    def _decompress(self, data: bytes) -> bytes:
+        if self._d is not None:
+            return self._d.decompress(data)
+        return zlib.decompress(data)
+
+    def encode(self, blob: Blob) -> Blob:
+        enc: Blob = {}
+        for key, a in blob.items():
+            raw = np.ascontiguousarray(a).tobytes()
+            enc[key + ".z"] = np.frombuffer(self._compress(raw), np.uint8)
+            enc[key + ".meta"] = _meta_arr({"dtype": _dtype_name(a.dtype),
+                                            "shape": list(a.shape)})
+        return enc
+
+    def decode(self, blob: Blob) -> Blob:
+        dec: Blob = {}
+        for key, a in blob.items():
+            if not key.endswith(".z"):
+                continue
+            base = key[:-2]
+            meta = _meta_doc(blob[base + ".meta"])
+            raw = self._decompress(bytes(a))
+            dec[base] = np.frombuffer(
+                raw, _dtype_from_name(meta["dtype"])).reshape(meta["shape"])
+        return dec
+
+
+_CODECS = {"identity": IdentityCodec, "int8": Int8Codec, "zstd": ZstdCodec}
+
+
+def get_codec(name: str):
+    if name not in _CODECS:
+        raise ValueError(f"unknown KV codec {name!r} "
+                         f"(choose from {sorted(_CODECS)})")
+    return _CODECS[name]()
+
+
+# --------------------------------------------------------------------------
+# Blob file container: explicit dtype-name + shape header, so bfloat16
+# arrays round-trip without pickling (np.savez chokes on extension dtypes).
+# Shared by DiskTier entries and the persist()/restore() manifest.
+# --------------------------------------------------------------------------
+def write_blob_file(path: str, blob: Blob) -> int:
+    meta = []
+    payload = []
+    for key, a in blob.items():
+        raw = np.ascontiguousarray(a).tobytes()
+        meta.append({"key": key, "dtype": _dtype_name(a.dtype),
+                     "shape": list(a.shape), "nbytes": len(raw)})
+        payload.append(raw)
+    hdr = json.dumps(meta).encode()
+    with open(path, "wb") as f:
+        f.write(len(hdr).to_bytes(8, "little"))
+        f.write(hdr)
+        for raw in payload:
+            f.write(raw)
+    return 8 + len(hdr) + sum(len(r) for r in payload)
+
+
+def read_blob_file(path: str) -> Blob:
+    with open(path, "rb") as f:
+        hlen = int.from_bytes(f.read(8), "little")
+        meta = json.loads(f.read(hlen).decode())
+        blob: Blob = {}
+        for m in meta:
+            raw = f.read(m["nbytes"])
+            blob[m["key"]] = np.frombuffer(
+                raw, _dtype_from_name(m["dtype"])).reshape(m["shape"])
+    return blob
 
 
 class HostTier:
@@ -118,7 +316,9 @@ class HostTier:
         self.evicted_entries += 1
         self.evicted_bytes += nbytes
         if owner is not None:
-            owner._on_host_evict(handle)
+            # the popped blob rides along so the owner can spill it to the
+            # disk tier instead of losing the bytes (DESIGN.md §18)
+            owner._on_host_evict(handle, blob)
 
     def get(self, handle: int) -> Blob:
         blob, _, _ = self._entries[handle]
@@ -154,6 +354,114 @@ class HostTier:
         self.used_bytes -= nbytes
 
 
+class DiskTier:
+    """File-backed third-tier page store: byte budget + LRU, same
+    handle/owner contract as :class:`HostTier`.
+
+    Entries are blob files under ``root``; ``used_bytes`` counts the
+    on-disk (stored, post-codec) sizes.  ``io_hook`` is an injectable
+    pre-IO callable (the engine wires the ``disk_io`` fault site through
+    it): a raising hook or a failing filesystem surfaces as an exception
+    from ``put``/``get``, which the owning :class:`TieredPagePool`
+    degrades — spill failure drops the node, promote failure truncates
+    the match — never crashing the pump (DESIGN.md §17/§18).
+    """
+
+    def __init__(self, root: str, budget_bytes: int,
+                 io_hook: Optional[Callable[[], None]] = None):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.budget_bytes = int(budget_bytes)
+        self.io_hook = io_hook
+        self.used_bytes = 0
+        self._entries: Dict[int, tuple] = {}  # handle -> (path, nbytes, owner)
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._handles = itertools.count(1)
+        self.put_count = 0
+        self.get_count = 0
+        self.evicted_entries = 0
+        self.evicted_bytes = 0
+
+    def __contains__(self, handle: int) -> bool:
+        return handle in self._entries
+
+    @property
+    def num_entries(self) -> int:
+        return len(self._entries)
+
+    def put(self, blob: Blob, owner=None) -> Optional[int]:
+        """Write one blob file; LRU-evict to make room.  Returns None when
+        the blob cannot fit; raises on IO failure (caller degrades)."""
+        est = blob_bytes(blob)
+        if est > self.budget_bytes:
+            return None
+        if self.used_bytes + est > self.budget_bytes:
+            for h in list(self._lru):
+                if self.used_bytes + est <= self.budget_bytes:
+                    break
+                if h not in self._entries:
+                    continue
+                _, _, own = self._entries[h]
+                if own is None or own.disk_can_evict(h):
+                    self._evict(h)
+            if self.used_bytes + est > self.budget_bytes:
+                return None
+        handle = next(self._handles)
+        path = os.path.join(self.root, f"page_{handle:08d}.blob")
+        if self.io_hook is not None:
+            self.io_hook()
+        nbytes = write_blob_file(path, blob)
+        self._entries[handle] = (path, nbytes, owner)
+        self._lru[handle] = None
+        self.used_bytes += nbytes
+        self.put_count += 1
+        return handle
+
+    def _evict(self, handle: int) -> None:
+        path, nbytes, owner = self._entries.pop(handle)
+        self._lru.pop(handle, None)
+        self.used_bytes -= nbytes
+        self.evicted_entries += 1
+        self.evicted_bytes += nbytes
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        if owner is not None:
+            owner._on_disk_evict(handle)
+
+    def get(self, handle: int) -> Blob:
+        path, _, _ = self._entries[handle]
+        self._lru.move_to_end(handle)
+        self.get_count += 1
+        if self.io_hook is not None:
+            self.io_hook()
+        return read_blob_file(path)
+
+    def touch(self, handle: int) -> None:
+        if handle in self._lru:
+            self._lru.move_to_end(handle)
+
+    def can_admit(self, nbytes: int) -> bool:
+        free = self.budget_bytes - self.used_bytes
+        if nbytes <= free:
+            return True
+        evictable = sum(nb for h, (_, nb, own) in self._entries.items()
+                        if own is None or own.disk_can_evict(h))
+        return nbytes <= free + evictable
+
+    def free(self, handle: int) -> None:
+        if handle not in self._entries:
+            return
+        path, nbytes, _ = self._entries.pop(handle)
+        self._lru.pop(handle, None)
+        self.used_bytes -= nbytes
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
+
 class TieredPagePool:
     """Façade over a device :class:`PagePool` adding a host demotion tier.
 
@@ -165,6 +473,11 @@ class TieredPagePool:
       import_fn(pages, blobs)                  host → device copies
       pressure_fn(n)                           free ≥ n device pages
                                                (tree LRU evict/demote)
+
+    ``codec`` transforms blobs on the way in/out of the host tier
+    (identity/int8/zstd — DESIGN.md §18); ``disk`` adds the third tier:
+    host-LRU pressure spills whole nodes to it instead of destroying
+    them, and promotion reads disk-tier nodes straight back to device.
     """
 
     is_tiered = True
@@ -173,27 +486,36 @@ class TieredPagePool:
                  export_fn: Optional[Callable] = None,
                  import_fn: Optional[Callable] = None,
                  pressure_fn: Optional[Callable[[int], int]] = None,
-                 promote_limit: int = 0):
+                 promote_limit: int = 0,
+                 codec=None, disk: Optional[DiskTier] = None):
         self.pool = pool
         self.host = host
+        self.disk = disk
+        self.codec = codec if codec is not None else IdentityCodec()
         self.export_fn = export_fn
         self.import_fn = import_fn
         self.pressure_fn = pressure_fn
         self.promote_limit = promote_limit   # max pages promoted per match
-        self._node_of: Dict[int, object] = {}  # handle -> radix Node
+        self._node_of: Dict[int, object] = {}  # host handle -> radix Node
+        self._node_of_disk: Dict[int, object] = {}  # disk handle -> Node
         self._match_promoted = 0
-        self._page_nbytes: Optional[int] = None  # learned on first export
+        self._page_nbytes: Optional[int] = None  # stored size, learned once
         # counters
         self.tier_hits = 0            # promote events (one per node)
+        self.disk_hits = 0            # promote events served from disk
         self.demoted_pages = 0
-        self.demoted_bytes = 0
+        self.demoted_bytes = 0        # logical bytes demoted
         self.promoted_pages = 0
-        self.promoted_bytes = 0
+        self.promoted_bytes = 0       # logical bytes promoted
+        self.spilled_pages = 0        # host → disk spills
         self.host_evicted_pages = 0   # pages truly lost from the host tier
+        self.disk_evicted_pages = 0   # pages truly lost from the disk tier
         self.dropped_device_pages = 0  # device pages lost to host-LRU cascade
         self.demote_failures = 0
         self.promote_failures = 0
         self.io_errors = 0            # export/import raised (DESIGN.md §17)
+        self.codec_logical_bytes = 0  # pre-codec bytes entering the host
+        self.codec_stored_bytes = 0   # post-codec bytes actually stored
 
     def bind(self, export_fn: Callable, import_fn: Callable,
              pressure_fn: Optional[Callable[[int], int]] = None) -> None:
@@ -271,6 +593,11 @@ class TieredPagePool:
         node = self._node_of.get(handle)
         return node is None or (node.lock_ref == 0 and node.pin_ref == 0)
 
+    def disk_can_evict(self, handle: int) -> bool:
+        """Disk LRU guard — same lock/pin contract as the host tier."""
+        node = self._node_of_disk.get(handle)
+        return node is None or (node.lock_ref == 0 and node.pin_ref == 0)
+
     def demote_node(self, node) -> bool:
         """Copy a node's device pages to the host tier and free them.
 
@@ -300,9 +627,11 @@ class TieredPagePool:
             chain.append(n)
             n = n.parent
         try:
-            # blob size per page is deterministic (pool bytes / num_pages):
-            # once learned, a doomed demote is rejected BEFORE paying the
-            # device→host export it would only throw away
+            # STORED blob size per page is deterministic for size-stable
+            # codecs (identity/int8): once learned, a doomed demote is
+            # rejected BEFORE paying the device→host export + encode it
+            # would only throw away.  zstd sizes are content-dependent, so
+            # the authoritative post-encode check below decides alone.
             if self._page_nbytes is not None and not self.host.can_admit(
                     len(pages) * self._page_nbytes):
                 self.demote_failures += 1
@@ -317,15 +646,21 @@ class TieredPagePool:
                 self.io_errors += 1
                 self.demote_failures += 1
                 return False
-            self._page_nbytes = blob_bytes(blobs[0])
-            if not self.host.can_admit(sum(blob_bytes(b) for b in blobs)):
+            logical = sum(blob_bytes(b) for b in blobs)
+            blobs = [self.codec.encode(b) for b in blobs]
+            stored = sum(blob_bytes(b) for b in blobs)
+            if self.codec.deterministic_size:
+                self._page_nbytes = blob_bytes(blobs[0])
+            # admission reserves what will actually be STORED — reserving
+            # logical (pre-codec) sizes would over-evict peers and
+            # under-fill the budget (the accounting bug this PR fixes)
+            if not self.host.can_admit(stored):
                 # the node cannot fit (budget too small, or the remainder
                 # is pinned): fail before the put loop evicts other nodes'
                 # entries as collateral for a doomed demote
                 self.demote_failures += 1
                 return False
             handles: List[int] = []
-            nbytes = 0
             for blob in blobs:
                 h = self.host.put(blob, self)
                 if h is None:
@@ -336,12 +671,13 @@ class TieredPagePool:
                     return False
                 self._node_of[h] = node
                 handles.append(h)
-                nbytes += blob_bytes(blob)
             self.pool.decref(pages)              # device pages become free
             node.pages = handles
             node.tier = "host"
             self.demoted_pages += len(pages)
-            self.demoted_bytes += nbytes
+            self.demoted_bytes += logical
+            self.codec_logical_bytes += logical
+            self.codec_stored_bytes += stored
             return True
         finally:
             for n in chain:
@@ -364,8 +700,11 @@ class TieredPagePool:
         if self.promote_limit and self._match_promoted + n > self.promote_limit:
             self.promote_failures += 1
             return False
+        from_disk = node.tier == "disk"
+        store = self.disk if from_disk else self.host
+        node_of = self._node_of_disk if from_disk else self._node_of
         for h in handles:
-            self.host.touch(h)
+            store.touch(h)
         pages = self.pool.alloc(n)
         if pages is None and self.pressure_fn is not None:
             self.pressure_fn(n - self.pool.free_pages)
@@ -373,39 +712,131 @@ class TieredPagePool:
         if pages is None:
             self.promote_failures += 1
             return False
-        blobs = [self.host.get(h) for h in handles]
         try:
+            blobs = [self.codec.decode(store.get(h)) for h in handles]
             self.import_fn(pages, blobs)
         except Exception:
-            # IO fault: give back the device pages just allocated; the
-            # host entries are untouched, so the node stays a valid
-            # host-tier node and the match truncates (partial hit) —
-            # the request recomputes the suffix instead of dying
+            # IO fault (disk read or device import): give back the device
+            # pages just allocated; the stored entries are untouched, so
+            # the node stays a valid host/disk-tier node and the match
+            # truncates (partial hit) — the request recomputes the suffix
+            # instead of dying
             self.pool.decref(pages)
             self.io_errors += 1
             self.promote_failures += 1
             return False
         for h in handles:
-            self._node_of.pop(h, None)
-            self.host.free(h)
+            node_of.pop(h, None)
+            store.free(h)
         node.pages = pages
         node.tier = "device"
         self.tier_hits += 1
+        if from_disk:
+            self.disk_hits += 1
         self.promoted_pages += n
         self._match_promoted += n
         self.promoted_bytes += sum(blob_bytes(b) for b in blobs)
         return True
 
-    def retarget(self, handles: Sequence[int], node) -> None:
-        """Re-own handles after a radix node split moved them to a new node."""
+    def host_put_blobs(self, blobs: Sequence[Blob]) -> Optional[List[int]]:
+        """Encode and store logical blobs in the host tier (restore path).
+        All-or-nothing: on any failure the already-stored entries are
+        freed and None is returned."""
+        enc = [self.codec.encode(b) for b in blobs]
+        stored = sum(blob_bytes(b) for b in enc)
+        if not self.host.can_admit(stored):
+            return None
+        handles: List[int] = []
+        for b in enc:
+            h = self.host.put(b, self)
+            if h is None:
+                for hh in handles:
+                    self._node_of.pop(hh, None)
+                    self.host.free(hh)
+                return None
+            handles.append(h)
+        logical = sum(blob_bytes(b) for b in blobs)
+        self.codec_logical_bytes += logical
+        self.codec_stored_bytes += stored
+        return handles
+
+    def adopt_host_handles(self, handles: Sequence[int], node) -> None:
+        """Register restored host handles as owned by ``node`` (so host-LRU
+        eviction and spill find their radix node)."""
         for h in handles:
-            if h in self._node_of:
+            self._node_of[h] = node
+
+    def retarget(self, handles: Sequence[int], node) -> None:
+        """Re-own handles after a radix node split moved them to a new node.
+        Splits happen in whichever tier the node occupies, so both handle
+        namespaces are checked."""
+        for h in handles:
+            if node.tier == "disk":
+                if h in self._node_of_disk:
+                    self._node_of_disk[h] = node
+            elif h in self._node_of:
                 self._node_of[h] = node
 
-    def _on_host_evict(self, handle: int) -> None:
-        """Host LRU dropped one of our entries: the owning radix node (and
-        any children — all host-tier by construction) must go with it."""
+    def _on_host_evict(self, handle: int, blob: Optional[Blob] = None) -> None:
+        """Host LRU dropped one of our entries.  With a disk tier bound,
+        the owning node SPILLS — its whole blob set moves to disk files and
+        the node survives with ``tier == "disk"``.  Without one (or when
+        the spill fails), the node and any children go with it — the
+        pre-§18 behaviour."""
         node = self._node_of.pop(handle, None)
+        if node is None:
+            return
+        if self.disk is not None and node.tier == "host" \
+                and self._spill_node_to_disk(node, handle, blob):
+            return
+        self._drop_subtree(node)
+
+    def _spill_node_to_disk(self, node, handle: int,
+                            blob: Optional[Blob]) -> bool:
+        """Move one host-tier node's blobs to the disk tier.  ``handle``
+        was already popped from the host store; its blob rides in by
+        value.  Children stay attached whatever their tier."""
+        blobs = []
+        for h in node.pages:
+            if h == handle:
+                if blob is None:
+                    return False
+                blobs.append(blob)
+            elif h in self.host:
+                blobs.append(self.host.get(h))
+            else:
+                return False       # partially-gone node: cannot spill
+        if not self.disk.can_admit(sum(blob_bytes(b) for b in blobs)):
+            return False
+        dhandles: List[int] = []
+        try:
+            for b in blobs:
+                dh = self.disk.put(b, self)
+                if dh is None:
+                    raise OSError("disk tier full")
+                self._node_of_disk[dh] = node
+                dhandles.append(dh)
+        except Exception:
+            # disk write failed (IO fault or budget): roll back and let the
+            # caller drop the node — degrade, don't crash
+            for dh in dhandles:
+                self._node_of_disk.pop(dh, None)
+                self.disk.free(dh)
+            self.io_errors += 1
+            return False
+        for h in node.pages:
+            if h != handle:
+                self._node_of.pop(h, None)
+                self.host.free(h)
+        self.spilled_pages += len(dhandles)
+        node.pages = dhandles
+        node.tier = "disk"
+        return True
+
+    def _on_disk_evict(self, handle: int) -> None:
+        """Disk LRU dropped an entry: the end of the line — the owning
+        node (and any children) is destroyed."""
+        node = self._node_of_disk.pop(handle, None)
         if node is None:
             return
         self._drop_subtree(node)
@@ -428,6 +859,11 @@ class TieredPagePool:
             for h in node.pages:
                 self._node_of.pop(h, None)
                 self.host.free(h)       # idempotent: triggering handle gone
+        elif node.tier == "disk":
+            self.disk_evicted_pages += len(node.pages)
+            for h in node.pages:
+                self._node_of_disk.pop(h, None)
+                self.disk.free(h)       # idempotent: triggering handle gone
         elif node.pages:
             self.dropped_device_pages += len(node.pages)
             self.pool.decref(node.pages)
@@ -439,13 +875,18 @@ class TieredPagePool:
     def stats(self) -> Dict[str, int]:
         return {
             "tier_hits": self.tier_hits,
+            "disk_hits": self.disk_hits,
             "demoted_pages": self.demoted_pages,
             "demoted_bytes": self.demoted_bytes,
             "promoted_pages": self.promoted_pages,
             "promoted_bytes": self.promoted_bytes,
+            "spilled_pages": self.spilled_pages,
             "host_evicted_pages": self.host_evicted_pages,
+            "disk_evicted_pages": self.disk_evicted_pages,
             "dropped_device_pages": self.dropped_device_pages,
             "demote_failures": self.demote_failures,
             "promote_failures": self.promote_failures,
             "tier_io_errors": self.io_errors,
+            "codec_logical_bytes": self.codec_logical_bytes,
+            "codec_stored_bytes": self.codec_stored_bytes,
         }

@@ -2,6 +2,7 @@
 API, SSE streaming, session/fork routes, overload shedding (429 +
 Retry-After), queueing deadlines (504), and /v1/metrics."""
 import concurrent.futures
+import math
 import threading
 
 import jax
@@ -129,7 +130,13 @@ def test_shedding_returns_429_with_retry_after(model):
         shed = [e for e in errs if e.status == 429]
         assert shed, f"burst of 8 over bound 1 must shed ({results})"
         for e in shed:
-            assert float(e.headers["retry-after"]) >= 1.0
+            # RFC 9110 Retry-After is integer seconds; the header is the
+            # CEIL of the engine hint with a floor of 1 — round() turned
+            # sub-0.5 s hints into "0" (retry immediately, hammering an
+            # already-overloaded server)
+            hdr = e.headers["retry-after"]
+            assert hdr == str(int(hdr)), "must be integer seconds"
+            assert int(hdr) == max(1, math.ceil(e.doc["retry_after_s"]))
             assert e.doc["finish_reason"] == "rejected"
         assert client.metrics()["shed"] == len(shed)
     finally:

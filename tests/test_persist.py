@@ -1,0 +1,310 @@
+"""Codec, disk-tier and persist/restore gates (DESIGN.md §18).
+
+  * codec ROUND-TRIP matrix — identity/zstd are bit-identical for every
+    cached dtype (fp32 AND bf16, which np.savez cannot even hold); int8
+    is lossy within its documented per-row bound |x - deq| <= amax/254;
+  * disk SPILL — host-LRU pressure moves whole nodes to disk files
+    instead of destroying them, and a later match promotes them back to
+    device bit-identical (counted as ``disk_hits``);
+  * disk-IO FAULTS — an injected ``disk_io`` fault degrades (spill
+    failure drops the node, promote failure truncates the match) and
+    never crashes;
+  * PERSIST/RESTORE — the acceptance gate: a persisted engine's manifest
+    rehydrates into a brand-new engine whose greedy continuation of the
+    same context is token-identical, served from tier hits rather than a
+    full re-prefill;
+  * percentile — the engine's linear-interpolated percentile matches
+    ``np.percentile`` (the old nearest-rank version returned the window
+    max as "p99" for small windows).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import tiny_serving_model
+from repro.core.config import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request, percentile
+from repro.serving.pool import PagePool
+from repro.serving.radix import RadixTree
+from repro.serving.tiers import (DiskTier, HostTier, TieredPagePool,
+                                 blob_bytes, get_codec, read_blob_file,
+                                 write_blob_file)
+
+PAGE = 4
+
+
+# ----------------------------------------------------------------- codecs
+def _blob(rng, dtype):
+    x = rng.standard_normal((2, 8, 4)).astype(np.float32)
+    y = rng.standard_normal((2, 8, 4)).astype(np.float32)
+    if dtype == "bfloat16":
+        import jax.numpy as jnp
+        return {"k": np.asarray(jnp.asarray(x, jnp.bfloat16)),
+                "v": np.asarray(jnp.asarray(y, jnp.bfloat16))}
+    return {"k": x, "v": y}
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("name", ["identity", "zstd", "int8"])
+def test_codec_roundtrip_matrix(name, dtype):
+    codec = get_codec(name)
+    rng = np.random.default_rng(0)
+    blob = _blob(rng, dtype)
+    dec = codec.decode(codec.encode(blob))
+    assert set(dec) == set(blob)
+    for key in blob:
+        assert dec[key].dtype == blob[key].dtype
+        assert dec[key].shape == blob[key].shape
+        if codec.lossless:
+            np.testing.assert_array_equal(
+                dec[key].view(np.uint8), blob[key].view(np.uint8))
+        else:   # int8: |x - deq| <= scale/2 = amax(|row|)/254 per row,
+            # plus the half-ulp of casting the dequantized value back to
+            # a narrow storage dtype (bf16 half-ulp <= |x| * 2^-8)
+            x = np.asarray(blob[key], np.float32)
+            bound = np.abs(x).max(axis=-1, keepdims=True) / 254.0 + 1e-6
+            if dtype == "bfloat16":
+                bound = bound + np.abs(x) * 2.0 ** -8
+            err = np.abs(np.asarray(dec[key], np.float32) - x)
+            assert (err <= bound).all(), err.max()
+
+
+def test_int8_codec_passes_through_integer_arrays():
+    """Already-quantized pool pages (kv_quant="int8" blobs carry int8
+    "k"/"v" plus f32 "ks"/"vs") must not be double-quantized."""
+    codec = get_codec("int8")
+    q = np.arange(-64, 64, dtype=np.int8).reshape(8, 16)
+    dec = codec.decode(codec.encode({"k": q}))
+    assert dec["k"].dtype == np.int8
+    np.testing.assert_array_equal(dec["k"], q)
+
+
+def test_zstd_codec_compresses_redundant_data():
+    codec = get_codec("zstd")
+    blob = {"k": np.zeros((64, 64), np.float32)}
+    enc = codec.encode(blob)
+    assert blob_bytes(enc) < blob_bytes(blob) // 10
+    assert codec.backend in ("zstandard", "zlib")
+
+
+def test_blob_file_roundtrips_bfloat16(tmp_path):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    blob = {"k": np.asarray(jnp.asarray(
+        rng.standard_normal((4, 8)), jnp.bfloat16)),
+        "meta": np.arange(3, dtype=np.int32)}
+    path = str(tmp_path / "page.blob")
+    nbytes = write_blob_file(path, blob)
+    assert nbytes > 0
+    back = read_blob_file(path)
+    assert set(back) == set(blob)
+    for key in blob:
+        assert back[key].dtype == blob[key].dtype
+        np.testing.assert_array_equal(
+            back[key].view(np.uint8), blob[key].view(np.uint8))
+
+
+# --------------------------------------------------------------- disk tier
+class FakeDeviceStore:
+    def __init__(self, num_pages, elems=8):
+        self.data = np.zeros((num_pages, elems), np.float32)
+
+    def export(self, pages):
+        return [{"x": self.data[p].copy()} for p in pages]
+
+    def import_(self, pages, blobs):
+        for p, b in zip(pages, blobs):
+            self.data[p] = b["x"]
+
+
+def make_tiered3(tmp_path, host_budget, disk_budget=1 << 20,
+                 num_pages=16, io_hook=None):
+    store = FakeDeviceStore(num_pages)
+    host = HostTier(host_budget)
+    disk = DiskTier(str(tmp_path / "disk"), disk_budget, io_hook=io_hook)
+    pool = TieredPagePool(PagePool(num_pages, PAGE), host,
+                          export_fn=store.export, import_fn=store.import_,
+                          disk=disk)
+    tree = RadixTree(pool)
+    pool.pressure_fn = tree.evict
+    return tree, pool, store, host, disk
+
+
+def insert_seq(tree, pool, store, toks, fill):
+    pages = pool.alloc(len(toks) // PAGE)
+    for i, p in enumerate(pages):
+        store.data[p] = fill * 100 + i
+    tree.insert(toks, pages)
+    pool.decref(pages)
+    return pages
+
+
+def test_host_pressure_spills_to_disk_and_promotes_back(tmp_path):
+    # host fits exactly ONE 2-page node (2 x 32B blobs)
+    tree, pool, store, host, disk = make_tiered3(tmp_path, host_budget=64)
+    a, b = list(range(8)), list(range(100, 108))
+    pa = insert_seq(tree, pool, store, a, fill=1)
+    snapshot = {p: store.data[p].copy() for p in pa}
+    insert_seq(tree, pool, store, b, fill=2)
+    assert tree.evict(2) == 2                   # a -> host
+    assert tree.evict(2) == 2                   # b -> host, a SPILLS to disk
+    assert pool.spilled_pages == 2
+    assert disk.num_entries == 2 and host.num_entries == 2
+    assert pool.dropped_device_pages == 0       # nothing was destroyed
+    store.data[:] = -1
+    got, matched, _ = tree.match_prefix(a)      # promote straight from disk
+    assert matched == 8
+    assert pool.disk_hits == 1 and pool.tier_hits == 1
+    for old, new in zip(pa, got):
+        np.testing.assert_array_equal(store.data[new], snapshot[old])
+    assert disk.num_entries == 0                # disk copy consumed
+    _, mb, _ = tree.match_prefix(b)             # b still on host
+    assert mb == 8
+
+
+def test_disk_put_fault_degrades_to_drop(tmp_path):
+    """A failing spill write rolls back and drops the node — the pre-disk
+    behaviour — instead of crashing the host-LRU eviction path."""
+    def boom():
+        raise OSError("injected disk fault")
+    tree, pool, store, host, disk = make_tiered3(tmp_path, host_budget=64,
+                                                 io_hook=boom)
+    a, b = list(range(8)), list(range(100, 108))
+    insert_seq(tree, pool, store, a, fill=1)
+    insert_seq(tree, pool, store, b, fill=2)
+    assert tree.evict(2) == 2
+    assert tree.evict(2) == 2                   # spill of a fails -> dropped
+    assert pool.io_errors >= 1 and pool.spilled_pages == 0
+    assert disk.num_entries == 0
+    _, ma, _ = tree.match_prefix(a)
+    assert ma == 0                              # a is gone, not corrupt
+    _, mb, _ = tree.match_prefix(b)
+    assert mb == 8                              # b unharmed on host
+
+
+def test_disk_get_fault_truncates_promote(tmp_path):
+    """A failing disk read during promotion truncates the match (the
+    request recomputes the suffix); the on-disk node stays intact and a
+    later healthy read still promotes it."""
+    fail = []
+
+    def flaky():
+        if fail:
+            raise OSError("injected disk fault")
+    tree, pool, store, host, disk = make_tiered3(tmp_path, host_budget=64,
+                                                 io_hook=flaky)
+    a, b = list(range(8)), list(range(100, 108))
+    pa = insert_seq(tree, pool, store, a, fill=1)
+    snapshot = {p: store.data[p].copy() for p in pa}
+    insert_seq(tree, pool, store, b, fill=2)
+    tree.evict(2)
+    tree.evict(2)                               # a on disk (healthy writes)
+    fail.append(True)
+    _, matched, _ = tree.match_prefix(a)
+    assert matched == 0                         # truncated, not crashed
+    assert pool.promote_failures == 1 and pool.io_errors == 1
+    assert disk.num_entries == 2                # node survived the fault
+    fail.clear()
+    store.data[:] = -1
+    got, matched, _ = tree.match_prefix(a)
+    assert matched == 8 and pool.disk_hits == 1
+    for old, new in zip(pa, got):
+        np.testing.assert_array_equal(store.data[new], snapshot[old])
+
+
+# --------------------------------------------------------- persist/restore
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_serving_model(rank=8)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    lora = tfm.init_lora_stacks(cfg, jax.random.PRNGKey(1), n_adapters=16)
+    return cfg, params, lora
+
+
+def run_one(engine, adapter, prompt, max_new=6):
+    req = Request(rid=0, adapter_id=adapter, prompt=list(prompt),
+                  max_new_tokens=max_new)
+    engine.submit(req)
+    while req.state != "done":
+        engine.step()
+    return req
+
+
+def _sc(persist_dir, **kw):
+    base = dict(page_size=16, max_pages=256, max_batch=4,
+                max_prefill_tokens=64, mode="forkkv",
+                max_pages_per_req=12, host_tier_bytes=64 << 20,
+                persist_dir=str(persist_dir))
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+@pytest.mark.parametrize("codec", ["identity", "zstd", "int8"])
+def test_persist_restore_token_parity(model, tmp_path, codec):
+    """Acceptance: a new engine restoring a persisted manifest continues
+    the same agent context with IDENTICAL greedy tokens, served from the
+    tier (tier_hits > 0) instead of a full re-prefill — under every
+    codec, since persisted blobs are stored logical (decoded)."""
+    cfg, params, lora = model
+    rng = np.random.default_rng(0)
+    ctx = list(rng.integers(0, cfg.vocab_size, 64))
+    probe = ctx + list(rng.integers(0, cfg.vocab_size, 8))
+
+    eng1 = Engine(cfg, params, lora, _sc(tmp_path, kv_codec=codec))
+    run_one(eng1, adapter=3, prompt=ctx)         # populate the radix tree
+    ref = run_one(eng1, adapter=3, prompt=probe)  # unbroken-run continuation
+    n = eng1.persist()
+    assert n > 0
+
+    eng2 = Engine(cfg, params, lora, _sc(tmp_path, kv_codec=codec))
+    assert eng2.restore() == n                   # every page rehydrated
+    req = run_one(eng2, adapter=3, prompt=probe)
+    assert req.output == ref.output, "restored context diverged"
+    m = eng2.metrics()
+    assert m["restored_pages"] == n
+    assert m["tier_hits"] > 0
+    # the shared 64-token context came from the tier, not recompute
+    assert req.prefilled_tokens < len(probe)
+
+
+def test_restore_rejects_mismatched_geometry(model, tmp_path):
+    cfg, params, lora = model
+    eng1 = Engine(cfg, params, lora, _sc(tmp_path))
+    rng = np.random.default_rng(1)
+    run_one(eng1, 2, list(rng.integers(0, cfg.vocab_size, 48)))
+    assert eng1.persist() > 0
+    eng2 = Engine(cfg, params, lora, _sc(tmp_path, mode="prefix"))
+    assert eng2.restore() == 0                   # mode mismatch: skip, no crash
+
+
+def test_engine_survives_disk_io_fault_plan(model, tmp_path):
+    """Engine-level ``disk_io`` fault injection: spills/promotes degrade
+    (drop or truncate) and the run still completes every request."""
+    cfg, params, lora = model
+    sc = _sc(tmp_path, host_tier_bytes=1 << 20, disk_tier_bytes=32 << 20,
+             fault_plan="disk_io:p0.5", fault_seed=7)
+    eng = Engine(cfg, params, lora, sc)
+    rng = np.random.default_rng(2)
+    for i in range(4):
+        req = run_one(eng, adapter=i + 1,
+                      prompt=list(rng.integers(0, cfg.vocab_size, 64)))
+        assert req.output and req.finish_reason == "length"
+
+
+# -------------------------------------------------------------- percentile
+def test_percentile_matches_numpy_linear():
+    rng = np.random.default_rng(3)
+    vals = sorted(rng.standard_normal(37).tolist())
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        assert percentile(vals, q) == pytest.approx(
+            np.percentile(vals, q * 100), abs=1e-12)
+    assert percentile([], 0.99) == 0.0
+    assert percentile([4.2], 0.99) == 4.2
+    # the regression: p99 of a small window must NOT be the window max
+    small = sorted(rng.standard_normal(20).tolist())
+    assert percentile(small, 0.99) < max(small)
+    assert percentile(small, 0.99) == pytest.approx(
+        np.percentile(small, 99))
